@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def timeit(fn: Callable, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path

@@ -1,0 +1,62 @@
+"""Fig. 2: required workers vs number of colluding workers.
+
+s = 4, t = 15, z in [1, 300]; AGE-CMPC (exact Algorithm-2/3 search),
+PolyDot-CMPC (exact Algorithm 1), Entangled-CMPC / SSMM / GCSA-NA
+(published formulas).  Also validates the paper's claimed crossovers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import closed_form as cf
+from repro.core import constructions as C
+
+from .common import write_csv
+
+S, T = 4, 15
+Z_MAX = 300
+
+
+def run() -> List[Dict]:
+    t0 = time.perf_counter()
+    rows = []
+    for z in range(1, Z_MAX + 1):
+        n_age, lam = cf.n_age_exact(S, T, z)
+        rows.append(
+            {
+                "z": z,
+                "age": n_age,
+                "age_lambda_star": lam,
+                "polydot": C.polydot_cmpc(S, T, z).n_workers,
+                "entangled": cf.n_entangled(S, T, z),
+                "ssmm": cf.n_ssmm(S, T, z),
+                "gcsa_na": cf.n_gcsa_na(S, T, z),
+            }
+        )
+    elapsed = time.perf_counter() - t0
+    path = write_csv("fig2_workers_vs_z", rows)
+
+    # paper-claimed structure (ties count as "best": at z=45 PolyDot
+    # exactly ties SSMM at 1679 workers)
+    assert all(r["age"] <= min(r["polydot"], r["entangled"], r["ssmm"], r["gcsa_na"]) for r in rows)
+    by_z = {r["z"]: r for r in rows}
+
+    def is_best(z, key):
+        r = by_z[z]
+        return r[key] <= min(r[k] for k in ("polydot", "entangled", "ssmm", "gcsa_na"))
+
+    checks = {
+        "ssmm_best_z<=48": all(is_best(z, "ssmm") for z in range(1, 49)),
+        "polydot_best_49..180": all(is_best(z, "polydot") for z in range(49, 181)),
+        "ent_gcsa_best_181..300": all(
+            is_best(z, "entangled") or is_best(z, "gcsa_na") for z in range(181, 301)
+        ),
+    }
+    return [
+        {
+            "name": "fig2_workers_vs_z",
+            "us_per_call": round(elapsed * 1e6 / Z_MAX, 1),
+            "derived": f"csv={path} " + " ".join(f"{k}={v}" for k, v in checks.items()),
+        }
+    ]

@@ -1,0 +1,96 @@
+"""Perf hillclimb harness: compile a named variant of a cell, extract
+roofline terms, and append to the iteration log.
+
+    python -m benchmarks.hillclimb --cell dbrx-132b:train_4k \
+        --variant moe_group16
+
+Variants patch the architecture config (or step options) before
+lowering; results land in results/hillclimb/<cell>__<variant>.json and
+feed EXPERIMENTS.md §Perf.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+COLL_MULT = {"all-reduce": 2.0}
+
+
+def _variants():
+    return {
+        "baseline": lambda cfg: cfg,
+        # dbrx: group-local MoE dispatch (one group per data shard)
+        "moe_group16": lambda cfg: dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=16)
+        ),
+        "moe_group64": lambda cfg: dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=64)
+        ),
+        "moe_expert_tp": lambda cfg: dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=16, expert_tp=True)
+        ),
+        # qwen: remat policy trade (save dots, recompute less)
+        "remat_dots": lambda cfg: dataclasses.replace(cfg, remat_policy="dots"),
+        "remat_none": lambda cfg: dataclasses.replace(cfg, remat_policy="none"),
+    }
+
+
+def run_variant(arch: str, shape_name: str, variant: str, step_kw=None):
+    from repro.configs import SHAPES, get_config
+    from repro.launch.hlo_cost import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+    from repro.models.registry import build_model
+
+    cfg = _variants()[variant](get_config(arch))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    model = build_model(cfg)
+    bundle = build_step(model, mesh, shape, **(step_kw or {}))
+    t0 = time.time()
+    with mesh:
+        compiled = bundle.lower().compile()
+    walk = analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    wire = sum(v * COLL_MULT.get(k, 1.0) for k, v in walk.collectives.items())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": variant,
+        "compile_s": round(time.time() - t0, 1),
+        "compute_s": walk.flops / PEAK_FLOPS,
+        "memory_s": walk.bytes / HBM_BW,
+        "collective_s": wire / LINK_BW,
+        "collective_bytes": walk.collectives,
+        "hbm_temp_gb": mem.temp_size_in_bytes / 1e9,
+        "hbm_args_gb": mem.argument_size_in_bytes / 1e9,
+    }
+    terms = {k: rec[k] for k in ("compute_s", "memory_s", "collective_s")}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+    rec = run_variant(arch, shape, args.variant)
+    path = os.path.join(args.out, f"{arch}__{shape}__{args.variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

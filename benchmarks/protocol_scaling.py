@@ -1,0 +1,45 @@
+"""Protocol wall-time scaling: worker hot loop (the paper's compute
+bottleneck) across matrix sizes and partition choices, exercising the
+GF(p) kernel path end-to-end."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import constructions as C
+from repro.core import protocol as proto
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, make_plan
+
+from .common import timeit, write_csv
+
+
+def run():
+    field = Field()
+    rng = np.random.default_rng(0)
+    rows = []
+    for m, s, t, z in [(64, 2, 2, 2), (128, 2, 2, 2), (128, 4, 2, 3), (256, 4, 4, 4)]:
+        sch = C.age_cmpc(s, t, z)
+        shapes = BlockShapes(k=m, ma=m, mb=m, s=s, t=t)
+        plan = make_plan(sch, shapes)
+        a = field.random(rng, (m, m))
+        b = field.random(rng, (m, m))
+        fa = proto.share_a(plan, a, rng)
+        fb = proto.share_b(plan, b, rng)
+        us = timeit(lambda: np.asarray(proto.worker_multiply(plan, fa, fb)), repeat=3)
+        rows.append(
+            {
+                "m": m, "s": s, "t": t, "z": z,
+                "n_workers": plan.n_workers,
+                "worker_multiply_us": round(us, 1),
+                "field_muls": plan.n_workers * (m // t) * (m // s) * (m // t),
+            }
+        )
+    path = write_csv("protocol_scaling", rows)
+    total = sum(r["worker_multiply_us"] for r in rows)
+    return [
+        {
+            "name": "protocol_scaling",
+            "us_per_call": round(total / len(rows), 1),
+            "derived": f"csv={path} max_m=256",
+        }
+    ]

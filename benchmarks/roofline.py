@@ -1,0 +1,137 @@
+"""Roofline analysis from the multi-pod dry-run artifacts.
+
+Per (arch x shape) on the single-pod mesh (16 x 16 = 256 chips of
+TPU v5e):
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = wire_bytes_per_chip / link_bw   (all-reduce ring
+                    counted twice; others once)
+
+FLOPs/bytes come from the loop-aware HLO walker (XLA's cost_analysis
+counts while-loop bodies once; see launch/hlo_cost.py) applied to the
+per-device SPMD module.  MODEL_FLOPS uses 6*N*D (train) or 2*N*D
+(prefill/decode) with N = active parameters.
+
+The roofline fraction reported is
+  (MODEL_FLOPS/chips/peak) / max(compute, memory, collective)
+i.e. the fraction of the step's lower-bound time spent on *useful*
+model FLOPs under perfect overlap.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import write_csv
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+COLL_MULT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * rec["global_batch"]
+
+
+def model_bytes(rec: dict) -> float:
+    """Minimum HBM traffic for the step (global): every step must touch
+    the parameters; the optimizer reads/writes p, mu, nu (all fp32);
+    decode/prefill additionally stream the cache."""
+    p_bytes = rec["params"] * 4.0
+    if rec["kind"] == "train":
+        return 7.0 * p_bytes  # p read+write, mu/nu read+write, grads
+    cache = float(rec.get("cache_bytes", 0))
+    return p_bytes + cache
+
+
+def analyze_record(rec: dict) -> Dict:
+    chips = rec["n_devices"]
+    walker = rec["walker"]
+    flops_chip = walker["flops"]  # per-device SPMD module
+    bytes_chip = walker["bytes"]
+    wire = sum(
+        v * COLL_MULT.get(k, 1.0) for k, v in walker["collective_bytes"].items()
+    )
+    compute_s = flops_chip / PEAK_FLOPS
+    memory_s = bytes_chip / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mb = model_bytes(rec)
+    # useful time: the larger of the flops-roofline and bytes-roofline
+    # floors (a memory-bound decode step is "at roofline" when it
+    # streams params+cache at full HBM bandwidth).
+    useful_s = max(mf / chips / PEAK_FLOPS, mb / chips / HBM_BW)
+    bound = max(terms.values())
+    frac = useful_s / bound if bound > 0 else 0.0
+    hlo_total = flops_chip * chips
+    advice = {
+        "compute": "reduce recompute (remat policy) / masked-block waste in attention",
+        "memory": "increase arithmetic intensity: larger microbatch, fuse, quantize cache",
+        "collective": "reshard to cut all-gathers (FSDP<->TP balance), overlap or compress collectives",
+    }[bottleneck]
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": f"{compute_s:.4e}",
+        "memory_s": f"{memory_s:.4e}",
+        "collective_s": f"{collective_s:.4e}",
+        "bottleneck": bottleneck,
+        "model_flops": f"{mf:.3e}",
+        "hlo_flops_total": f"{hlo_total:.3e}",
+        "useful_ratio": round(mf / hlo_total, 3) if hlo_total else 0.0,
+        "roofline_fraction": round(frac, 4),
+        "hbm_gb_per_chip": round(
+            (rec["memory"].get("argument_size_in_bytes", 0)
+             + rec["memory"].get("temp_size_in_bytes", 0)) / 1e9, 2),
+        "what_moves_it": advice,
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun"):
+    rows: List[Dict] = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*__single.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        rows.append(analyze_record(rec))
+    path = write_csv("roofline", rows)
+    if not rows:
+        return [{"name": "roofline", "us_per_call": 0,
+                 "derived": "no dry-run artifacts yet — run repro.launch.dryrun"}]
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    by_bottleneck = {}
+    for r in rows:
+        by_bottleneck[r["bottleneck"]] = by_bottleneck.get(r["bottleneck"], 0) + 1
+    return [
+        {
+            "name": "roofline",
+            "us_per_call": 0,
+            "derived": (
+                f"csv={path} cells={len(rows)} bottlenecks={by_bottleneck} "
+                f"worst={worst['arch']}x{worst['shape']}@{worst['roofline_fraction']}"
+            ),
+        }
+    ]

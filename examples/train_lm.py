@@ -1,0 +1,86 @@
+"""End-to-end training driver example: train a ~100M-parameter
+MiniCPM-family model on the synthetic Markov corpus for a few hundred
+steps with checkpointing + auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+(A smaller default profile runs in ~a minute on CPU; pass --profile
+100m for the real thing.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    get_schedule,
+)
+
+PROFILES = {
+    # ~100M params: d=768, 12 layers (MiniCPM recipe incl. WSD schedule)
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+                 head_dim=64, d_ff=2048, vocab_size=32_000),
+    "tiny": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+                 head_dim=32, d_ff=256, vocab_size=2_048),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--profile", default="tiny", choices=PROFILES)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="results/train_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        reduced(get_config("minicpm-2b")), **PROFILES[args.profile]
+    )
+    model = build_model(cfg)
+    print(f"model: {cfg.name} ({args.profile}) ~"
+          f"{sum(int(np.prod(i.shape)) for i in jax.tree.leaves(model.init(jax.random.PRNGKey(0))))/1e6:.1f}M params")
+
+    opt_cfg = AdamWConfig(lr=get_schedule("wsd", 6e-4, args.steps))  # MiniCPM WSD
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq_len, args.batch))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, opt_cfg)
+    start = 0
+    if mgr.latest_step() is not None:  # auto-resume after preemption
+        start, state = mgr.restore({"params": params, "opt": opt._asdict()})
+        params, opt = state["params"], AdamWState(**state["opt"])
+        print(f"resumed from step {start}")
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        p2, o2, m = adamw_update(grads, opt, params, opt_cfg)
+        return p2, o2, loss, m["lr"]
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        params, opt, loss, lr = step(params, opt, data.batch(i))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}  lr {float(lr):.2e}  "
+                  f"({(time.time()-t0):.1f}s)")
+        if (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt._asdict()})
+    mgr.save(args.steps, {"params": params, "opt": opt._asdict()})
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

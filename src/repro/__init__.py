@@ -1,0 +1,3 @@
+"""CMPX: coded multi-party computation (AGE-CMPC / PolyDot-CMPC) as a
+first-class substrate in a multi-pod JAX training/serving framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,13 @@
+from .base import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    SSMConfig,
+    XLSTMConfig,
+    HybridConfig,
+    SHAPES,
+    ShapeConfig,
+    reduced,
+    shape_applicable,
+)
+from .registry import ARCH_NAMES, all_configs, get_config, get_shape  # noqa: F401

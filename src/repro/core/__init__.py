@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution — coded MPC (AGE-CMPC,
+PolyDot-CMPC) — as composable JAX modules.
+
+Layers (bottom-up):
+
+* ``gf``             — GF(p) arithmetic (host oracle + f32-limb device path)
+* ``powers``         — polynomial power-set combinatorics (sumsets, C1-C6)
+* ``constructions``  — executable Algorithm 1 / Algorithm 2 share builders
+* ``closed_form``    — Theorems 2 & 8 + baseline worker counts / overheads
+* ``planner``        — CMPCPlan: evaluation points, interpolation matrices
+* ``protocol``       — the 3-phase protocol engine (jit-able, vmapped)
+* ``distributed``    — shard_map execution over a worker mesh axis
+* ``layers``         — secure_matmul / PrivateLinear high-level API
+"""
+from .closed_form import (  # noqa: F401
+    age_gamma,
+    age_lambda_star,
+    communication_overhead,
+    computation_overhead,
+    n_age,
+    n_entangled,
+    n_gcsa_na,
+    n_polydot,
+    n_ssmm,
+    n_workers,
+    storage_overhead,
+)
+from .constructions import Scheme, age_cmpc, age_cmpc_fixed, build_scheme, polydot_cmpc  # noqa: F401
+from .gf import Field, P_DEFAULT, mod_matmul_f32  # noqa: F401

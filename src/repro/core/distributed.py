@@ -1,0 +1,156 @@
+"""Distributed CMPC: workers mapped onto a mesh axis via shard_map.
+
+TPU-native adaptation of the paper's edge-worker topology (DESIGN.md
+"hardware adaptation"):
+
+* the N protocol workers become shards along a ``workers`` mesh axis
+  (padded to a multiple of the axis size; pad workers send zero),
+* Phase 2's pairwise exchange — worker n sends G_n(alpha_{n'}) to every
+  n' (N(N-1) point-to-point messages on D2D links in the paper) — maps
+  onto ONE collective:
+
+    - ``all_to_all``     faithful transposition of the (sender,
+                          receiver) axes; bytes on the wire match the
+                          paper's zeta = N(N-1) m^2/t^2 accounting,
+    - ``psum``           all-reduce of the receiver-indexed partial
+                          sums; simple but replicates I(x) everywhere,
+    - ``psum_scatter``   reduce-scatter: each device ends with exactly
+                          its receivers' I(alpha) — the beyond-paper
+                          optimization (see EXPERIMENTS.md §Perf): the
+                          exchanged volume drops from O(N^2 m^2/t^2) to
+                          O(N m^2/t^2) because the sum into I(x) is
+                          *linear* and can be fused into the collective.
+
+Integer safety: all lane values are < p < 2**16 and reductions happen
+on int32 partial sums reduced mod p per device, so totals stay below
+D * p << 2**31 for any realistic axis size.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels.modmatmul.ops import mod_matmul
+from .planner import CMPCPlan
+
+
+def _pad_to_multiple(x: np.ndarray, mult: int, axis: int = 0) -> np.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def run_phase2_sharded(
+    plan: CMPCPlan,
+    fa: jnp.ndarray,
+    fb: jnp.ndarray,
+    noise: np.ndarray,
+    mesh: Mesh,
+    axis: str = "workers",
+    mode: str = "all_to_all",
+    matmul_backend: str = "f32limb",
+    return_compiled: bool = False,
+) -> np.ndarray:
+    """Workers compute H and run the G-exchange on a device mesh.
+
+    fa: [n_total, br, bk] shares, fb: [n_total, bk, bc]; noise:
+    [n_workers, z, br, bc] per-worker blinding matrices R_w^{(n)}.
+    Returns I(alpha_n) for all (unpadded) provisioned workers.
+    """
+    p = plan.field.p
+    d = mesh.shape[axis]
+    n_total = plan.n_total
+    assert n_total * max(1, plan.n_workers) < (1 << 31) // p, "int32 reduction bound"
+
+    # Pad worker-stacked operands to the axis size; pad workers are
+    # receive-only (zero mix rows / zero noise).
+    fa_p = _pad_to_multiple(np.asarray(fa), d)
+    fb_p = _pad_to_multiple(np.asarray(fb), d)
+    npad = fa_p.shape[0]
+    mix_rows = np.zeros((npad, npad), np.int64)
+    mix_rows[: plan.n_workers, :n_total] = plan.mix  # [senders, receivers]
+    vnz = np.zeros((npad, plan.scheme.z), np.int64)
+    vnz[:n_total] = plan.vnoise
+    noise_p = np.zeros((npad,) + noise.shape[1:], np.int64)
+    noise_p[: plan.n_workers] = noise
+
+    mix_j = jnp.asarray(mix_rows.astype(np.int32))
+    vn_j = jnp.asarray(vnz.astype(np.int32))
+    noise_j = jnp.asarray(noise_p.astype(np.int32))
+    fa_j = jnp.asarray(fa_p)
+    fb_j = jnp.asarray(fb_p)
+
+    br = fa_p.shape[1]
+    bc = fb_p.shape[2]
+    blk = br * bc
+
+    def local(fa_l, fb_l, mix_l, noise_l):
+        # Phase 2a: every local worker multiplies its shares.
+        h_l = mod_matmul(fa_l, fb_l, p=p, backend=matmul_backend)  # [nloc, br, bc]
+        nloc = h_l.shape[0]
+        h_flat = h_l.reshape(nloc, blk)
+        # Phase 2b: local workers' G evaluated at every receiver:
+        # contrib[nl, r, :] = mix[nl, r] * H[nl] + sum_w R[nl, w] * vn[r, w]
+        contrib = (
+            mix_l[:, :, None].astype(jnp.uint32) * h_flat[:, None, :].astype(jnp.uint32)
+        ) % jnp.uint32(p)
+        # Per-worker blinding: noise_eval[nl, r] = sum_w R[nl, w] vn[r, w],
+        # accumulated mod p each step (uint32-safe for any z).
+        nz = noise_l.reshape(nloc, plan.scheme.z, blk)
+
+        def nmix(acc, w):
+            term = (
+                vn_j[:, w][None, :, None].astype(jnp.uint32)
+                * nz[:, w, :][:, None, :].astype(jnp.uint32)
+            ) % jnp.uint32(p)
+            return (acc + term) % jnp.uint32(p), None
+
+        acc0 = jnp.zeros((nloc, vn_j.shape[0], blk), jnp.uint32)
+        noise_eval, _ = jax.lax.scan(nmix, acc0, jnp.arange(plan.scheme.z))
+        contrib = ((contrib + noise_eval) % jnp.uint32(p)).astype(jnp.int32)
+
+        if mode == "all_to_all":
+            # [nloc, npad, blk] -> exchange receiver chunks -> [npad, nloc_r, blk]
+            exch = jax.lax.all_to_all(
+                contrib, axis, split_axis=1, concat_axis=0, tiled=True
+            )
+            i_local = _mod_sum(exch, p)  # [nloc_r, blk]
+        elif mode == "psum":
+            part = _mod_sum(contrib, p)  # [npad, blk] local partial
+            i_all = jax.lax.psum(part, axis) % p
+            idx = jax.lax.axis_index(axis)
+            nloc_r = npad // d
+            i_local = jax.lax.dynamic_slice_in_dim(i_all, idx * nloc_r, nloc_r, 0)
+        elif mode == "psum_scatter":
+            part = _mod_sum(contrib, p)  # [npad, blk]
+            i_local = jax.lax.psum_scatter(part, axis, scatter_dimension=0, tiled=True) % p
+        else:
+            raise ValueError(f"unknown mode {mode}")
+        return i_local.astype(jnp.int32).reshape(-1, br, bc)
+
+    spec = P(axis)
+    shard_fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=spec,
+        check_vma=False,
+    )
+    jitted = jax.jit(shard_fn)
+    if return_compiled:
+        return jitted.lower(fa_j, fb_j, mix_j, noise_j).compile()
+    i_evals = np.asarray(jitted(fa_j, fb_j, mix_j, noise_j))
+    return i_evals[:n_total]
+
+
+def _mod_sum(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Sum over axis 0 with int32 accumulation (safe: N * p < 2**31)."""
+    return (jnp.sum(x.astype(jnp.int32), axis=0) % p).astype(jnp.int32)

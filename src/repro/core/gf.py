@@ -1,0 +1,271 @@
+"""Finite-field GF(p) arithmetic for coded MPC.
+
+Two execution paths:
+
+* **Host path** (numpy ``int64``): exact reference arithmetic used for
+  protocol planning (Vandermonde inverses, Lagrange coefficients) and as
+  the test oracle.  ``p`` may be any prime < 2**31.
+
+* **Device path** (jnp ``float32`` limbs): TPU-native modular matmul.
+  The MXU is a floating-point systolic array, so instead of porting an
+  integer GPU algorithm we decompose field elements ``a = a_hi*256 +
+  a_lo`` into 8-bit limbs, accumulate limb products exactly in f32
+  (products < 2**16; <=256 accumulands keeps partial sums < 2**24, the
+  f32 exact-integer bound) and reduce mod p after every 256-deep chunk.
+  This requires ``p < 2**16``; the default prime is 65521 (the largest
+  16-bit prime).
+
+The device path is also implemented as a Pallas TPU kernel in
+``repro.kernels.modmatmul``; the jnp version here is the portable
+fallback (identical math, usable inside shard_map/vmap everywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Largest 16-bit prime: elements fit in two 8-bit limbs exactly, enabling
+# exact f32 accumulation on the MXU with 256-deep inner chunks.
+P_DEFAULT = 65521
+
+# Inner-dimension chunk depth for exact f32 limb accumulation:
+# 255*255*256 = 16_646_400 < 2**24.
+CHUNK_K = 256
+
+LIMB = 256  # limb base
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """A prime field GF(p)."""
+
+    p: int = P_DEFAULT
+
+    def __post_init__(self):
+        if self.p < 3:
+            raise ValueError("p must be an odd prime")
+
+    # ------------------------------------------------------------------
+    # host (numpy int64) reference arithmetic
+    # ------------------------------------------------------------------
+    def asarray(self, x) -> np.ndarray:
+        return np.asarray(x, dtype=np.int64) % self.p
+
+    def add(self, a, b):
+        return (np.asarray(a, np.int64) + np.asarray(b, np.int64)) % self.p
+
+    def sub(self, a, b):
+        return (np.asarray(a, np.int64) - np.asarray(b, np.int64)) % self.p
+
+    def mul(self, a, b):
+        return (np.asarray(a, np.int64) * np.asarray(b, np.int64)) % self.p
+
+    def matmul(self, a, b) -> np.ndarray:
+        """Exact (mod p) matmul on the host; chunked to avoid int64 overflow."""
+        a = self.asarray(a)
+        b = self.asarray(b)
+        k = a.shape[-1]
+        # (p-1)^2 * chunk must stay < 2**63; p < 2**31 -> chunk >= 2 always ok.
+        chunk = max(1, int((2**62) // (int(self.p - 1) ** 2)))
+        out = np.zeros(a.shape[:-1] + b.shape[1:], dtype=np.int64)
+        for s in range(0, k, chunk):
+            out = (out + a[..., s : s + chunk] @ b[s : s + chunk]) % self.p
+        return out
+
+    def pow(self, a, e: int):
+        a = int(a) % self.p
+        return pow(a, int(e), self.p)
+
+    def inv(self, a):
+        a = int(a) % self.p
+        if a == 0:
+            raise ZeroDivisionError("0 has no inverse in GF(p)")
+        return pow(a, self.p - 2, self.p)
+
+    def neg(self, a):
+        return (-np.asarray(a, np.int64)) % self.p
+
+    def random(self, rng: np.random.Generator, shape) -> np.ndarray:
+        return rng.integers(0, self.p, size=shape, dtype=np.int64)
+
+    # ------------------------------------------------------------------
+    # structured host helpers
+    # ------------------------------------------------------------------
+    def vandermonde(self, points, powers) -> np.ndarray:
+        """V[n, j] = points[n] ** powers[j]  (mod p)."""
+        points = np.asarray(points, np.int64) % self.p
+        powers = list(int(u) for u in powers)
+        cols = [np.array([self.pow(x, u) for x in points], np.int64) for u in powers]
+        return np.stack(cols, axis=1)
+
+    def solve(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Solve a @ x = b (mod p) by Gauss-Jordan elimination."""
+        a = self.asarray(a).copy()
+        b = self.asarray(b).copy()
+        n = a.shape[0]
+        if a.shape[1] != n:
+            raise ValueError("square system required")
+        if b.ndim == 1:
+            b = b[:, None]
+            squeeze = True
+        else:
+            squeeze = False
+        for col in range(n):
+            piv = None
+            for r in range(col, n):
+                if a[r, col] != 0:
+                    piv = r
+                    break
+            if piv is None:
+                raise ZeroDivisionError("singular matrix mod p")
+            if piv != col:
+                a[[col, piv]] = a[[piv, col]]
+                b[[col, piv]] = b[[piv, col]]
+            inv = self.inv(a[col, col])
+            a[col] = (a[col] * inv) % self.p
+            b[col] = (b[col] * inv) % self.p
+            for r in range(n):
+                if r != col and a[r, col] != 0:
+                    f = a[r, col]
+                    a[r] = (a[r] - f * a[col]) % self.p
+                    b[r] = (b[r] - f * b[col]) % self.p
+        x = b % self.p
+        return x[:, 0] if squeeze else x
+
+    def inv_matrix(self, a: np.ndarray) -> np.ndarray:
+        return self.solve(a, np.eye(a.shape[0], dtype=np.int64))
+
+    # ------------------------------------------------------------------
+    # fixed-point quantisation (real <-> field)
+    # ------------------------------------------------------------------
+    def encode(self, x: np.ndarray, scale: int) -> np.ndarray:
+        """Quantise reals into the field with a centered lift."""
+        q = np.rint(np.asarray(x, np.float64) * scale).astype(np.int64)
+        half = (self.p - 1) // 2
+        if np.any(np.abs(q) > half):
+            raise OverflowError("value out of field range at this scale")
+        return q % self.p
+
+    def decode(self, x: np.ndarray, scale: int) -> np.ndarray:
+        """Centered lift back to signed reals."""
+        x = self.asarray(x)
+        half = (self.p - 1) // 2
+        signed = np.where(x > half, x - self.p, x)
+        return signed.astype(np.float64) / scale
+
+
+# ----------------------------------------------------------------------
+# jnp device path: exact f32 limb arithmetic (p < 2**16)
+# ----------------------------------------------------------------------
+def _check_limb_prime(p: int):
+    if p >= 1 << 16:
+        raise ValueError("f32 limb path requires p < 2**16")
+
+
+def _mod_f32(x: jnp.ndarray, p: float) -> jnp.ndarray:
+    """x mod p for exact-integer-valued f32 x with x < 2**24.
+
+    f32 division rounds, so floor(x/p) can be off by one; both products
+    q*p and the correction arithmetic stay exact (< 2**24), so a single
+    conditional fix-up on each side restores exactness.
+    """
+    q = jnp.floor(x / p)
+    r = x - q * p
+    r = jnp.where(r < 0, r + p, r)
+    return jnp.where(r >= p, r - p, r)
+
+
+def _mulmod_const_f32(x: jnp.ndarray, c: int, p: int) -> jnp.ndarray:
+    """x * c mod p for f32 x in [0, p), constant c in [0, p), p < 2**16.
+
+    Decomposes x into 8-bit limbs so every product stays < 2**24 (f32
+    exact-integer range) for *any* 16-bit prime.
+    """
+    pf = float(p)
+    c_hi = float((c * LIMB) % p)  # (256*c mod p) < 2**16
+    c_lo = float(c % p)
+    x_hi = jnp.floor(x / LIMB)  # < 256
+    x_lo = x - x_hi * LIMB  # < 256
+    return _mod_f32(_mod_f32(x_hi * c_hi, pf) + _mod_f32(x_lo * c_lo, pf), pf)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
+    """Exact GF(p) matmul via 8-bit limb decomposition in f32.
+
+    a: [..., M, K] int32 in [0, p);  b: [K, N] int32 in [0, p).
+    Returns int32 [..., M, N] = a @ b mod p.
+    """
+    _check_limb_prime(p)
+    pf = float(p)
+    k = a.shape[-1]
+    pad = (-k) % CHUNK_K
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b = jnp.pad(b, [(0, pad), (0, 0)])
+        k += pad
+    nchunk = k // CHUNK_K
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    a_hi = jnp.floor(af / LIMB)
+    a_lo = af - a_hi * LIMB
+    b_hi = jnp.floor(bf / LIMB)
+    b_lo = bf - b_hi * LIMB
+
+    # 2**16 mod p and 2**8 mod p combine factors (kept < 2**16).
+    f_hihi = float((LIMB * LIMB) % p)
+    f_mid = float(LIMB % p)
+
+    out_shape = a.shape[:-1] + (b.shape[-1],)
+    acc0 = jnp.zeros(out_shape, jnp.float32)
+
+    # Re-chunk the contraction dim to the scan axis: [nchunk, ..., CHUNK_K].
+    def chunked_lhs(x):
+        x = x.reshape(x.shape[:-1] + (nchunk, CHUNK_K))
+        return jnp.moveaxis(x, -2, 0)
+
+    ah_c, al_c = chunked_lhs(a_hi), chunked_lhs(a_lo)
+    bh_c = b_hi.reshape(nchunk, CHUNK_K, b.shape[-1])
+    bl_c = b_lo.reshape(nchunk, CHUNK_K, b.shape[-1])
+
+    def body(acc, xs):
+        ah, al, bh, bl = xs
+        # Each dot accumulates <=256 products of values < 2**16: exact in f32.
+        hh = _mod_f32(ah @ bh, pf)
+        hl = _mod_f32(ah @ bl + al @ bh, pf)
+        ll = _mod_f32(al @ bl, pf)
+        chunkv = _mod_f32(
+            _mulmod_const_f32(hh, int(f_hihi), p)
+            + _mulmod_const_f32(hl, int(f_mid), p)
+            + ll,
+            pf,
+        )
+        return _mod_f32(acc + chunkv, pf), None
+
+    acc, _ = jax.lax.scan(body, acc0, (ah_c, al_c, bh_c, bl_c))
+    return acc.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def mod_mul(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
+    """Elementwise a*b mod p. Products of 16-bit values fit exactly in uint32."""
+    _check_limb_prime(p)
+    prod = a.astype(jnp.uint32) * b.astype(jnp.uint32)
+    return (prod % jnp.uint32(p)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def mod_add(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
+    s = a.astype(jnp.uint32) + b.astype(jnp.uint32)
+    return (s % jnp.uint32(p)).astype(jnp.int32)
+
+
+def powers_matrix(points: np.ndarray, powers, p: int = P_DEFAULT) -> np.ndarray:
+    """Host-side Vandermonde with arbitrary power support; int64 -> int32-safe."""
+    f = Field(p)
+    return f.vandermonde(points, powers).astype(np.int64)

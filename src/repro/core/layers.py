@@ -1,0 +1,195 @@
+"""High-level privacy-preserving compute API.
+
+``secure_matmul`` runs one Y = A^T B under CMPC between two logical
+sources, with fixed-point quantisation into GF(p) and centered-lift
+decode.  ``PrivateLinear`` wraps a weight matrix as "source 2" so that
+activations from "source 1" are multiplied without either worker (or
+the master) learning the operands — the paper's edge-inference setting
+with the transformer stack of this framework as the surrounding model.
+
+Overflow discipline: an inner product of length k with operands bounded
+by ``a_max``/``w_max`` needs  k * (a_max*scale_a) * (w_max*scale_w)
+< (p-1)/2.  ``choose_scales`` picks the largest power-of-two scales
+satisfying that bound; with p = 65521 this caps precision, so
+``PrivateLinear`` also supports column-blocked accumulation (split the
+inner dim, run multiple protocol instances, sum the decoded reals) —
+precision then scales with the number of blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .constructions import Scheme, build_scheme
+from .gf import Field
+from .planner import BlockShapes, CMPCPlan, make_plan
+from . import protocol
+
+
+def choose_scales(k: int, a_max: float, w_max: float, p: int) -> int:
+    """Largest power-of-two scale S such that k*(a_max*S)*(w_max*S) fits."""
+    half = (p - 1) // 2
+    s = 1
+    while k * (a_max * 2 * s) * (w_max * 2 * s) < half:
+        s *= 2
+    return s
+
+
+@dataclasses.dataclass
+class SecureMatmulResult:
+    y: np.ndarray
+    trace: protocol.Trace
+    plan: CMPCPlan
+
+
+def secure_matmul(
+    a: np.ndarray,
+    b: np.ndarray,
+    method: str = "age",
+    s: int = 2,
+    t: int = 2,
+    z: int = 1,
+    field: Optional[Field] = None,
+    scale: Optional[int] = None,
+    n_spare: int = 0,
+    seed: int = 0,
+) -> SecureMatmulResult:
+    """Privacy-preserving Y = A^T B over the reals.
+
+    a: [k, ma] held by source 1;  b: [k, mb] held by source 2.
+    """
+    field = field or Field()
+    k, ma = a.shape
+    k2, mb = b.shape
+    if k != k2:
+        raise ValueError("inner dimensions disagree")
+    if scale is None:
+        scale = choose_scales(k, float(np.abs(a).max() + 1e-9), float(np.abs(b).max() + 1e-9), field.p)
+    scheme = build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=k, ma=ma, mb=mb, s=s, t=t)
+    plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
+    aq = field.encode(a, scale)
+    bq = field.encode(b, scale)
+    yq, trace = protocol.run(plan, aq, bq, seed=seed + 1)
+    y = field.decode(yq, scale * scale)
+    return SecureMatmulResult(y=y, trace=trace, plan=plan)
+
+
+def secure_matmul_crt(
+    a: np.ndarray,
+    b: np.ndarray,
+    method: str = "age",
+    s: int = 2,
+    t: int = 2,
+    z: int = 1,
+    primes: tuple = (65521, 65519),
+    scale: Optional[int] = None,
+    seed: int = 0,
+) -> SecureMatmulResult:
+    """CRT dual-prime CMPC (beyond-paper): run the protocol once per
+    16-bit prime and combine residues with the Chinese Remainder
+    Theorem.  The effective modulus P = p1*p2 ~ 2**32 gives fixed-point
+    headroom the single 16-bit field cannot, at exactly 2x the worker
+    compute (both instances still use the f32-limb TPU kernel).
+    """
+    k, ma = a.shape
+    _, mb = b.shape
+    pbig = int(np.prod([int(p) for p in primes]))
+    if scale is None:
+        half = (pbig - 1) // 2
+        a_max = float(np.abs(a).max() + 1e-9)
+        w_max = float(np.abs(b).max() + 1e-9)
+        scale = 1
+        while k * (a_max * 2 * scale) * (w_max * 2 * scale) < half:
+            scale *= 2
+    scheme = build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=k, ma=ma, mb=mb, s=s, t=t)
+
+    aq_signed = np.rint(np.asarray(a, np.float64) * scale).astype(np.int64)
+    bq_signed = np.rint(np.asarray(b, np.float64) * scale).astype(np.int64)
+    residues = []
+    plans = []
+    trace = None
+    for i, p in enumerate(primes):
+        field = Field(int(p))
+        plan = make_plan(scheme, shapes, field=field, seed=seed + 17 * i)
+        yq, trace = protocol.run(plan, aq_signed % p, bq_signed % p, seed=seed + 31 * i)
+        residues.append(np.asarray(yq, np.int64))
+        plans.append(plan)
+    # CRT combine (python ints to avoid overflow), then centered lift.
+    p1, p2 = (int(p) for p in primes)
+    inv_p1_mod_p2 = pow(p1, -1, p2)
+    r1, r2 = residues
+    combined = (r1 + ((r2 - r1) * inv_p1_mod_p2 % p2) * p1) % pbig
+    half = pbig // 2
+    signed = np.where(combined > half, combined - pbig, combined)
+    y = signed.astype(np.float64) / (scale * scale)
+    return SecureMatmulResult(y=y, trace=trace, plan=plans[0])
+
+
+class PrivateLinear:
+    """y = x @ W via CMPC, W private to the layer owner.
+
+    The plan is built once per (k, out, s, t, z) signature and reused
+    across calls; the inner dimension may be split into ``blocks``
+    independent protocol instances for extra fixed-point headroom.
+    """
+
+    def __init__(
+        self,
+        w: np.ndarray,
+        method: str = "age",
+        s: int = 2,
+        t: int = 2,
+        z: int = 1,
+        blocks: int = 1,
+        field: Optional[Field] = None,
+        seed: int = 0,
+    ):
+        self.w = np.asarray(w, np.float64)
+        self.method, self.s, self.t, self.z = method, s, t, z
+        self.blocks = blocks
+        self.field = field or Field()
+        self.seed = seed
+        k = self.w.shape[0]
+        if k % blocks:
+            raise ValueError("blocks must divide the inner dimension")
+        self._plan_cache = {}
+
+    def _plan(self, batch: int, kblk: int) -> CMPCPlan:
+        key = (batch, kblk)
+        if key not in self._plan_cache:
+            scheme = build_scheme(self.method, self.s, self.t, self.z)
+            shapes = BlockShapes(
+                k=kblk, ma=batch, mb=self.w.shape[1], s=self.s, t=self.t
+            )
+            self._plan_cache[key] = make_plan(
+                scheme, shapes, field=self.field, seed=self.seed
+            )
+        return self._plan_cache[key]
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        """x: [batch, k] activations (source 1).  Returns [batch, out]."""
+        x = np.asarray(x, np.float64)
+        batch, k = x.shape
+        kblk = k // self.blocks
+        out = np.zeros((batch, self.w.shape[1]))
+        for bi in range(self.blocks):
+            sl = slice(bi * kblk, (bi + 1) * kblk)
+            xa = x[:, sl].T  # [kblk, batch] == "A"
+            wb = self.w[sl]  # [kblk, out]  == "B"
+            scale = choose_scales(
+                kblk,
+                float(np.abs(xa).max() + 1e-9),
+                float(np.abs(wb).max() + 1e-9),
+                self.field.p,
+            )
+            plan = self._plan(batch, kblk)
+            aq = self.field.encode(xa, scale)
+            bq = self.field.encode(wb, scale)
+            yq, _ = protocol.run(plan, aq, bq, seed=self.seed + bi)
+            out += self.field.decode(yq, scale * scale)
+        return out

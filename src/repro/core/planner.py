@@ -1,0 +1,173 @@
+"""CMPC execution planning.
+
+A ``CMPCPlan`` freezes everything that is *data independent* about one
+protocol instance: the share construction (``Scheme``), the field, the
+evaluation points alpha_n, the Phase-2 mixing matrix (Lagrange-style
+coefficients r_n^{(i,l)} folded with the receiver Vandermonde), the
+Phase-3 decode matrix, and block-shape bookkeeping.  Plans are computed
+on the host in exact int64 and shipped to devices as int32 constants.
+
+Worker redundancy: ``n_spare`` extra evaluation points provide
+straggler tolerance in Phase 2 — any ``n_workers`` of the
+``n_workers + n_spare`` provisioned workers can serve Phase 2 (the
+mixing matrix is recomputed per surviving subset via ``phase2_matrix``),
+and any ``t^2 + z`` of those can serve Phase 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .constructions import Scheme
+from .gf import Field
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShapes:
+    """Partition bookkeeping for Y = A^T B.
+
+    A: [k, ma]  (so A^T: [ma, k]), B: [k, mb], Y: [ma, mb].
+    A^T is split into t x s blocks of [ma/t, k/s]; B into s x t blocks
+    of [k/s, mb/t].
+    """
+
+    k: int
+    ma: int
+    mb: int
+    s: int
+    t: int
+
+    def __post_init__(self):
+        if self.k % self.s:
+            raise ValueError(f"s={self.s} must divide inner dim k={self.k}")
+        if self.ma % self.t or self.mb % self.t:
+            raise ValueError(f"t={self.t} must divide output dims {self.ma}, {self.mb}")
+
+    @property
+    def blk_a(self) -> Tuple[int, int]:
+        return (self.ma // self.t, self.k // self.s)
+
+    @property
+    def blk_b(self) -> Tuple[int, int]:
+        return (self.k // self.s, self.mb // self.t)
+
+    @property
+    def blk_y(self) -> Tuple[int, int]:
+        return (self.ma // self.t, self.mb // self.t)
+
+
+@dataclasses.dataclass(frozen=True)
+class CMPCPlan:
+    scheme: Scheme
+    field: Field
+    shapes: BlockShapes
+    n_spare: int
+    alphas: np.ndarray  # [n_total] distinct nonzero points
+    va: np.ndarray  # [n_total, |P(F_A)|] Vandermonde on F_A support
+    vb: np.ndarray  # [n_total, |P(F_B)|]
+    # Phase 2: mix[n, n'] = sum_{i,l} r_n^{(i,l)} alpha_{n'}^{i+t*l}
+    # for the primary worker set (first n_workers alphas).
+    mix: np.ndarray  # [n_workers, n_total]
+    vnoise: np.ndarray  # [n_total, z] receiver Vandermonde on powers t^2+w
+    decode_w: np.ndarray  # [t^2+z, t^2+z] inverse Vandermonde, first t^2+z workers
+    important_idx: np.ndarray  # [t, t] -> index of u_{i,l} in h_powers
+
+    @property
+    def n_workers(self) -> int:
+        return self.scheme.n_workers
+
+    @property
+    def n_total(self) -> int:
+        return self.n_workers + self.n_spare
+
+    @property
+    def decode_threshold(self) -> int:
+        return self.scheme.decode_threshold
+
+    # ------------------------------------------------------------------
+    def phase2_matrix(self, worker_ids: Sequence[int]) -> np.ndarray:
+        """Recompute the Phase-2 mixing matrix for an arbitrary surviving
+        subset of exactly ``n_workers`` workers (straggler mitigation)."""
+        return _phase2_matrix(self.scheme, self.field, self.alphas, np.asarray(worker_ids))
+
+    def decode_matrix(self, worker_ids: Sequence[int]) -> np.ndarray:
+        """Inverse Vandermonde for Phase-3 reconstruction from any
+        ``t^2 + z`` workers."""
+        ids = np.asarray(worker_ids)
+        if ids.size != self.decode_threshold:
+            raise ValueError(
+                f"need exactly {self.decode_threshold} workers, got {ids.size}"
+            )
+        v = self.field.vandermonde(self.alphas[ids], range(self.decode_threshold))
+        return self.field.inv_matrix(v)
+
+
+def _phase2_matrix(
+    scheme: Scheme, field: Field, alphas: np.ndarray, ids: np.ndarray
+) -> np.ndarray:
+    """mix[n, n'] for senders ``ids`` (interpolating H's support from the
+    evaluations at alphas[ids]) and all receivers."""
+    if ids.size != scheme.n_workers:
+        raise ValueError(
+            f"phase 2 needs exactly {scheme.n_workers} workers, got {ids.size}"
+        )
+    t = scheme.t
+    h_powers = list(scheme.h_powers)
+    v_h = field.vandermonde(alphas[ids], h_powers)  # [N, |P(H)|]
+    v_inv = field.inv_matrix(v_h)  # coeff = v_inv @ evals
+    imp_map = scheme.coded.important_map()
+    pos = {u: j for j, u in enumerate(h_powers)}
+    # r[(i,l), n] = v_inv[pos(u_{i,l}), n]
+    r = np.zeros((t * t, ids.size), np.int64)
+    for (i, l), u in imp_map.items():
+        r[i + t * l] = v_inv[pos[u]]
+    # receiver Vandermonde on G powers {i + t*l} = 0..t^2-1
+    v_g = field.vandermonde(alphas, range(t * t))  # [n_total, t^2]
+    # mix[n, n'] = sum_g r[g, n] * v_g[n', g]
+    return field.matmul(r.T, v_g.T)  # [N, n_total]
+
+
+def make_plan(
+    scheme: Scheme,
+    shapes: BlockShapes,
+    field: Optional[Field] = None,
+    n_spare: int = 0,
+    seed: int = 0,
+) -> CMPCPlan:
+    field = field or Field()
+    if shapes.s != scheme.s or shapes.t != scheme.t:
+        raise ValueError("scheme and shapes disagree on (s, t)")
+    n = scheme.n_workers + n_spare
+    if n >= field.p:
+        raise ValueError("field too small for worker count")
+    rng = np.random.default_rng(seed)
+    # distinct nonzero evaluation points
+    alphas = rng.choice(field.p - 1, size=n, replace=False).astype(np.int64) + 1
+    va = field.vandermonde(alphas, scheme.fa_powers)
+    vb = field.vandermonde(alphas, scheme.fb_powers)
+    mix = _phase2_matrix(scheme, field, alphas, np.arange(scheme.n_workers))
+    tt = scheme.t * scheme.t
+    vnoise = field.vandermonde(alphas, range(tt, tt + scheme.z))
+    dec_ids = np.arange(scheme.decode_threshold)
+    v_dec = field.vandermonde(alphas[dec_ids], range(scheme.decode_threshold))
+    decode_w = field.inv_matrix(v_dec)
+    imp = scheme.coded.important_map()
+    pos = {u: j for j, u in enumerate(scheme.h_powers)}
+    important_idx = np.zeros((scheme.t, scheme.t), np.int64)
+    for (i, l), u in imp.items():
+        important_idx[i, l] = pos[u]
+    return CMPCPlan(
+        scheme=scheme,
+        field=field,
+        shapes=shapes,
+        n_spare=n_spare,
+        alphas=alphas,
+        va=va,
+        vb=vb,
+        mix=mix,
+        vnoise=vnoise,
+        decode_w=decode_w,
+        important_idx=important_idx,
+    )

@@ -1,0 +1,244 @@
+"""The three-phase CMPC protocol engine.
+
+Faithful execution of Algorithm 3 (AGE-CMPC) / Section IV-A
+(PolyDot-CMPC) over GF(p):
+
+Phase 1  sources evaluate F_A(alpha_n), F_B(alpha_n) and send one share
+         pair to each worker,
+Phase 2  every worker computes H(alpha_n) = F_A(alpha_n) F_B(alpha_n),
+         forms G_n(x) (eq. 19) and exchanges evaluations; each worker
+         sums the received values into I(alpha_n) (eq. 20),
+Phase 3  the master reconstructs I(x) from any t^2 + z responses and
+         reads Y = A^T B off the first t^2 coefficients (eq. 21).
+
+This module operates on *stacked worker arrays* (leading axis = worker)
+so the same code runs single-host (vmapped) or sharded over a mesh axis
+via ``repro.core.distributed``.  All modular compute routes through the
+``modmatmul`` kernel ops so the TPU path uses the Pallas kernel.
+
+A ``Trace`` records the byte movement of each phase, matching the
+communication-overhead accounting of Corollary 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.modmatmul.ops import mod_matmul, polyeval
+from .gf import Field
+from .planner import BlockShapes, CMPCPlan
+
+
+@dataclasses.dataclass
+class Trace:
+    """Scalar-movement accounting (field elements, not bytes)."""
+
+    phase1_source_to_worker: int = 0
+    phase2_worker_to_worker: int = 0
+    phase3_worker_to_master: int = 0
+
+    @property
+    def total(self) -> int:
+        return (
+            self.phase1_source_to_worker
+            + self.phase2_worker_to_worker
+            + self.phase3_worker_to_master
+        )
+
+
+def _block_stack_a(plan: CMPCPlan, a: np.ndarray) -> np.ndarray:
+    """Coefficient stack of C_A: blocks of A^T laid out on fa_powers."""
+    sh = plan.shapes
+    at = np.asarray(a).T  # [ma, k]
+    br, bc = sh.blk_a
+    amap = plan.scheme.coded.a_power_map()
+    pos = {u: idx for idx, u in enumerate(plan.scheme.fa_powers)}
+    stack = np.zeros((len(plan.scheme.fa_powers), br, bc), np.int64)
+    for (i, j), u in amap.items():
+        stack[pos[u]] = at[i * br : (i + 1) * br, j * bc : (j + 1) * bc]
+    return stack
+
+
+def _block_stack_b(plan: CMPCPlan, b: np.ndarray) -> np.ndarray:
+    sh = plan.shapes
+    b = np.asarray(b)
+    br, bc = sh.blk_b
+    bmap = plan.scheme.coded.b_power_map()
+    pos = {u: idx for idx, u in enumerate(plan.scheme.fb_powers)}
+    stack = np.zeros((len(plan.scheme.fb_powers), br, bc), np.int64)
+    for (k, l), u in bmap.items():
+        stack[pos[u]] = b[k * br : (k + 1) * br, l * bc : (l + 1) * bc]
+    return stack
+
+
+def _fill_secrets(
+    plan: CMPCPlan, stack: np.ndarray, secret_powers, all_powers, rng: np.random.Generator
+) -> np.ndarray:
+    pos = {u: idx for idx, u in enumerate(all_powers)}
+    for u in secret_powers:
+        stack[pos[u]] = plan.field.random(rng, stack.shape[1:])
+    return stack
+
+
+# ----------------------------------------------------------------------
+# Phase 1 — sources share data with workers
+# ----------------------------------------------------------------------
+def share_a(plan: CMPCPlan, a: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
+    """Source 1: F_A(alpha_n) for every provisioned worker.
+
+    Returns int32 [n_total, ma/t, k/s].
+    """
+    stack = _block_stack_a(plan, a)
+    stack = _fill_secrets(plan, stack, plan.scheme.sa, plan.scheme.fa_powers, rng)
+    va = jnp.asarray(plan.va.astype(np.int32))
+    return polyeval(va, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+
+
+def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
+    stack = _block_stack_b(plan, b)
+    stack = _fill_secrets(plan, stack, plan.scheme.sb, plan.scheme.fb_powers, rng)
+    vb = jnp.asarray(plan.vb.astype(np.int32))
+    return polyeval(vb, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+
+
+# ----------------------------------------------------------------------
+# Phase 2 — workers compute and communicate
+# ----------------------------------------------------------------------
+def worker_multiply(plan: CMPCPlan, fa: jnp.ndarray, fb: jnp.ndarray) -> jnp.ndarray:
+    """H(alpha_n) = F_A(alpha_n) @ F_B(alpha_n), batched over workers."""
+    return mod_matmul(fa, fb, p=plan.field.p)
+
+
+def degree_reduce(
+    plan: CMPCPlan,
+    h: jnp.ndarray,
+    rng: np.random.Generator,
+    worker_ids: Optional[Sequence[int]] = None,
+) -> jnp.ndarray:
+    """Dense (single-host) simulation of the Phase-2 exchange.
+
+    Every worker n forms G_n(x) (eq. 19) and evaluates it at every other
+    worker's alpha; the receivers sum into I(alpha_{n'}) (eq. 20).  Here
+    that is two modular matmuls:
+
+      I[n'] = sum_n mix[n, n'] * H[n]  +  sum_w (sum_n R_w^(n)) vnoise[n', w]
+
+    ``worker_ids`` selects which n_workers (of n_total provisioned)
+    serve Phase 2 — straggler mitigation; default = the primary set.
+    Returns I evaluations for *all* provisioned workers [n_total, ...].
+    """
+    p = plan.field.p
+    n = plan.n_workers
+    if worker_ids is None:
+        ids = np.arange(n)
+        mix = plan.mix
+    else:
+        ids = np.asarray(worker_ids)
+        mix = plan.phase2_matrix(ids)
+    blk = h.shape[-2:]
+    h_sel = h[jnp.asarray(ids)]
+    h_flat = h_sel.reshape(n, -1)
+    i_flat = mod_matmul(
+        jnp.asarray((mix.T % p).astype(np.int32)), h_flat, p=p
+    )  # [n_total, blk]
+    # Workers' blinding terms R_w^{(n)}: each of the n Phase-2 workers
+    # contributes z random matrices; only their sum enters I(x).
+    r = plan.field.random(rng, (n, plan.scheme.z) + blk)
+    r_sum = np.sum(r, axis=0) % p  # [z, blk]
+    noise_flat = mod_matmul(
+        jnp.asarray((plan.vnoise % p).astype(np.int32)),
+        jnp.asarray(r_sum.reshape(plan.scheme.z, -1).astype(np.int32)),
+        p=p,
+    )
+    i_evals = (i_flat.astype(jnp.uint32) + noise_flat.astype(jnp.uint32)) % jnp.uint32(p)
+    return i_evals.astype(jnp.int32).reshape((plan.n_total,) + blk)
+
+
+# ----------------------------------------------------------------------
+# Phase 3 — master reconstructs Y = A^T B
+# ----------------------------------------------------------------------
+def reconstruct(
+    plan: CMPCPlan,
+    i_evals: jnp.ndarray,
+    worker_ids: Optional[Sequence[int]] = None,
+) -> np.ndarray:
+    """Interpolate I(x) from t^2 + z responses and assemble Y."""
+    thr = plan.decode_threshold
+    if worker_ids is None:
+        ids = np.arange(thr)
+        w = plan.decode_w
+    else:
+        ids = np.asarray(worker_ids)
+        w = plan.decode_matrix(ids)
+    sel = np.asarray(i_evals)[ids].reshape(thr, -1)
+    coeffs = plan.field.matmul(w, sel)  # [thr, blk_flat]
+    t = plan.scheme.t
+    br, bc = plan.shapes.blk_y
+    y = np.zeros((plan.shapes.ma, plan.shapes.mb), np.int64)
+    for i in range(t):
+        for l in range(t):
+            blkc = coeffs[i + t * l].reshape(br, bc)
+            y[i * br : (i + 1) * br, l * bc : (l + 1) * bc] = blkc
+    return y
+
+
+def reconstruct_coded_only(
+    plan: CMPCPlan, h: jnp.ndarray, worker_ids: Optional[Sequence[int]] = None
+) -> np.ndarray:
+    """Coded-computation decode (no Phase 2): interpolate H(x) directly.
+
+    Used for validating decodability of the underlying AGE/PolyDot codes
+    (Theorem 6); the master learns garbage coefficients, so this mode
+    does NOT provide master-side privacy.
+    """
+    n = plan.n_workers
+    ids = np.arange(n) if worker_ids is None else np.asarray(worker_ids)
+    if ids.size != n:
+        raise ValueError(f"coded decode needs exactly {n} evaluations")
+    v = plan.field.vandermonde(plan.alphas[ids], plan.scheme.h_powers)
+    vinv = plan.field.inv_matrix(v)
+    sel = np.asarray(h)[ids].reshape(n, -1)
+    coeffs = plan.field.matmul(vinv, sel)
+    t = plan.scheme.t
+    br, bc = plan.shapes.blk_y
+    y = np.zeros((plan.shapes.ma, plan.shapes.mb), np.int64)
+    for i in range(t):
+        for l in range(t):
+            blkc = coeffs[plan.important_idx[i, l]].reshape(br, bc)
+            y[i * br : (i + 1) * br, l * bc : (l + 1) * bc] = blkc
+    return y
+
+
+# ----------------------------------------------------------------------
+# end-to-end simulation
+# ----------------------------------------------------------------------
+def run(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    seed: int = 0,
+    phase2_ids: Optional[Sequence[int]] = None,
+    phase3_ids: Optional[Sequence[int]] = None,
+) -> Tuple[np.ndarray, Trace]:
+    """Full protocol: returns (Y = A^T B mod p, communication trace)."""
+    rng = np.random.default_rng(seed)
+    fa = share_a(plan, a, rng)
+    fb = share_b(plan, b, rng)
+    h = worker_multiply(plan, fa, fb)
+    i_evals = degree_reduce(plan, h, rng, worker_ids=phase2_ids)
+    y = reconstruct(plan, i_evals, worker_ids=phase3_ids)
+
+    sh = plan.shapes
+    n = plan.n_workers
+    t = plan.scheme.t
+    trace = Trace(
+        phase1_source_to_worker=plan.n_total
+        * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
+        phase2_worker_to_worker=n * (n - 1) * (sh.ma // t) * (sh.mb // t),
+        phase3_worker_to_master=plan.decode_threshold * (sh.ma // t) * (sh.mb // t),
+    )
+    return y, trace

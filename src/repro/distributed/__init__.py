@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, activation constraints, pipeline parallelism."""

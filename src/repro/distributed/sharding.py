@@ -1,0 +1,251 @@
+"""Sharding rules: logical axes -> mesh PartitionSpecs.
+
+Parallelism layout (GSPMD):
+
+* ``model`` axis: tensor parallel — vocab, attention heads, FFN hidden,
+  experts (expert parallelism), recurrent-state heads,
+* ``data`` axis: batch data parallel + optional FSDP (parameter d_model
+  dims sharded over data; XLA inserts the gather/reduce-scatter pair),
+* ``pod`` axis (multi-pod mesh): outermost data parallel — parameters
+  are replicated across pods and gradients all-reduce over the slow
+  inter-pod links (optionally compressed, see train.grad_compress),
+* long-context decode (batch 1): the KV/seq dimension of caches is
+  sharded over ``data`` instead of batch (context parallelism).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+# ----------------------------------------------------------------------
+# activation sharding constraints
+# ----------------------------------------------------------------------
+# GSPMD propagates *parameter* shardings onto activations unless told
+# otherwise — with FSDP params that unshards the batch dimension.  Model
+# code calls ``constrain(x, logical_axes)`` at layer boundaries; the
+# step builders install concrete rules for the duration of tracing.
+_TLS = threading.local()
+
+
+def activation_rules(mesh: Mesh, long_context: bool = False) -> Dict[str, Any]:
+    da = data_axes(mesh)
+    b_ax = da if len(da) > 1 else (da[0] if da else None)
+    return {
+        "mesh": mesh,
+        "batch": None if long_context else b_ax,
+        "seq": b_ax if long_context else None,
+        "heads": "model",
+        "experts": "model",
+        "vocab": "model",
+    }
+
+
+@contextlib.contextmanager
+def use_activation_rules(rules: Optional[Dict[str, Any]]):
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    """Apply a sharding constraint by logical axis names (no-op when no
+    rules are installed — smoke tests and single-device runs)."""
+    rules = getattr(_TLS, "rules", None)
+    if rules is None:
+        return x
+    mesh = rules["mesh"]
+    names = []
+    for dim, a in zip(x.shape, axes):
+        m = rules.get(a) if a else None
+        if isinstance(m, str) and dim % mesh.shape[m] != 0:
+            m = None
+        if isinstance(m, tuple):
+            total = 1
+            for ax in m:
+                total *= mesh.shape[ax]
+            if dim % total != 0:
+                m = None
+        names.append(m)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*names)))
+
+
+def _is_info(x):
+    # duck-typed to avoid a circular import with models.common
+    return type(x).__name__ == "ParamInfo"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_rules(mesh: Mesh, fsdp: bool = True) -> Dict[str, Any]:
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "embed": "data" if (fsdp and "data" in mesh.shape) else None,
+        "lora": None,
+        "layers": None,
+        "state": None,
+    }
+
+
+def param_pspecs(abstract: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    rules = param_rules(mesh, fsdp)
+
+    def spec(info) -> P:
+        if len(info.shape) <= 1:
+            return P()  # replicate vectors/scalars (norm scales, biases)
+        names = []
+        used = set()
+        for dim, ax in zip(info.shape, info.axes):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is not None and dim % mesh.shape[mesh_ax] != 0:
+                mesh_ax = None  # indivisible dims stay replicated
+            if mesh_ax in used:
+                mesh_ax = None  # a mesh axis shards at most one dim
+            if mesh_ax is not None:
+                used.add(mesh_ax)
+            names.append(mesh_ax)
+        return P(*names)
+
+    return jax.tree.map(spec, abstract, is_leaf=_is_info)
+
+
+def param_shardings(abstract: Any, mesh: Mesh, fsdp: bool = True) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(abstract, mesh, fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ----------------------------------------------------------------------
+# batch specs
+# ----------------------------------------------------------------------
+def batch_pspecs(batch_abstract: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    da = data_axes(mesh)
+    b_ax = da if len(da) > 1 else (da[0] if da else None)
+
+    def spec(path, s):
+        rest = (None,) * (len(s.shape) - 1)
+        return P(b_ax, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_abstract)
+
+
+def batch_shardings(batch_abstract, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        batch_pspecs(batch_abstract, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ----------------------------------------------------------------------
+# cache specs (decode)
+# ----------------------------------------------------------------------
+_TRAILING = {
+    # name -> (trailing_rank, trailing logical axes)
+    ("k", 4): ("batch", "seq", "model", None),
+    ("v", 4): ("batch", "seq", "model", None),
+    ("k_rope", 3): ("batch", "seq", None),
+    ("state", 4): ("batch", "model", None, None),
+    ("conv", 3): ("batch", None, "model"),
+    ("n", 3): ("batch", "model", None),
+    ("n", 2): ("batch", "model"),
+    ("c", 4): ("batch", "model", None, None),
+    ("c", 2): ("batch", "model"),
+    ("h", 2): ("batch", "model"),
+    ("m", 2): ("batch", "model"),
+    ("enc_out", 3): ("batch", None, None),
+}
+
+
+def cache_pspecs(
+    cfg: ModelConfig, cache_abstract: Any, mesh: Mesh, long_context: bool = False
+) -> Any:
+    """Spec tree mirroring a cache tree.  ``long_context`` switches to
+    context parallelism: seq over data, batch replicated."""
+    da = data_axes(mesh)
+    b_ax = da if len(da) > 1 else (da[0] if da else None)
+    sub = {
+        "batch": None if long_context else b_ax,
+        "seq": b_ax if long_context else None,
+        "model": "model",
+    }
+
+    def spec(path, s):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        if name == "idx" or name == "enc_len" or len(s.shape) == 0:
+            return P()
+        # mla latent cache: family-specific "c"
+        if name == "c" and cfg.mla is not None and len(s.shape) >= 3:
+            trail = ("batch", "seq", None)
+        else:
+            trail = None
+            for r in range(len(s.shape), 0, -1):
+                if (name, r) in _TRAILING:
+                    trail = _TRAILING[(name, r)]
+                    break
+            if trail is None:
+                return P()
+        lead = (None,) * (len(s.shape) - len(trail))
+        names = []
+        for dim, ax in zip(s.shape[len(lead):], trail):
+            m = sub.get(ax) if isinstance(ax, str) else ax
+            if isinstance(m, str) and dim % mesh.shape[m] != 0:
+                m = None
+            if isinstance(m, tuple):
+                total = 1
+                for a in m:
+                    total *= mesh.shape[a]
+                if dim % total != 0:
+                    m = None
+            names.append(m)
+        # KV caches dominate decode HBM.  If the heads dim could not take
+        # the model axis (kv heads not divisible by it), shard the SEQ
+        # dim over "model" instead (flash-decode combines partial
+        # softmax across shards; GSPMD inserts the reduction).
+        used = {n for n in names if n is not None} | {
+            a for n in names if isinstance(n, tuple) for a in n
+        }
+        if "model" not in used and "seq" in trail:
+            si = trail.index("seq")
+            dim = s.shape[len(lead) + si]
+            cur = names[si]
+            cand = (
+                ("model",) if cur is None
+                else (cur + ("model",) if isinstance(cur, tuple) else (cur, "model"))
+            )
+            total = 1
+            for a in cand:
+                total *= mesh.shape[a]
+            if dim % total == 0:
+                names[si] = cand if len(cand) > 1 else "model"
+        return P(*lead, *names)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)
+
+
+def cache_shardings(cfg, cache_abstract, mesh, long_context=False):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cache_pspecs(cfg, cache_abstract, mesh, long_context),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: GF(p) matrix
+multiplication (the worker Phase-2 product H = F_A * F_B).  Each kernel
+ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (the
+jitted public wrapper) and ref.py (oracle)."""

@@ -1,0 +1,3 @@
+from .kernel import modmatmul_pallas  # noqa: F401
+from .ops import mod_matmul, polyeval  # noqa: F401
+from .ref import modmatmul_jnp_ref, modmatmul_ref  # noqa: F401

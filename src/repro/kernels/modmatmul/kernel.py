@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: exact GF(p) matrix multiplication, p < 2**16.
+
+TPU adaptation of the paper's worker hot loop H(alpha_n) =
+F_A(alpha_n) * F_B(alpha_n) over a prime field.  GPU implementations of
+field matmul use 32/64-bit integer MACs; the TPU MXU is a *floating
+point* systolic array, so we re-think the arithmetic instead of porting:
+
+* field elements (< 2**16) are split into two 8-bit limbs,
+* limb products (< 2**16) are accumulated on the MXU in f32 — any
+  partial sum of <= 256 such products stays below 2**24, the largest
+  integer f32 represents exactly,
+* the inner (contraction) dimension is therefore tiled at ``bk = 256``
+  and a Barrett-free reduction (x - floor(x/p)*p, exact in f32 for
+  x < 2**24) runs once per tile,
+* limb recombination multiplies by (2**16 mod p) and (2**8 mod p) so
+  every intermediate stays < 2**24.
+
+Tiles are MXU-aligned (multiples of 128 on M/N).  The accumulator lives
+in the output VMEM block; the K grid axis is ``arbitrary`` (sequential)
+so accumulation is race-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.gf import P_DEFAULT
+
+LIMB = 256.0
+
+
+def _modf32(x, p):
+    # floor(x/p) in f32 can be off by one ulp; correct both directions.
+    r = x - jnp.floor(x / p) * p
+    r = jnp.where(r < 0, r + p, r)
+    return jnp.where(r >= p, r - p, r)
+
+
+def _mulmod_const(x, c: int, p: int):
+    """x * c mod p with x in [0, p) f32, exact for any p < 2**16: split x
+    into 8-bit limbs so each product stays below 2**24."""
+    pf = float(p)
+    c_hi = float((c * 256) % p)
+    c_lo = float(c % p)
+    x_hi = jnp.floor(x / LIMB)
+    x_lo = x - x_hi * LIMB
+    return _modf32(_modf32(x_hi * c_hi, pf) + _modf32(x_lo * c_lo, pf), pf)
+
+
+def _modmatmul_kernel(a_ref, b_ref, o_ref, *, p: int):
+    """One (bm, bn) output tile; K-axis accumulation across grid dim 2."""
+    pf = float(p)
+    f_hihi = (1 << 16) % p  # 2**16 mod p
+    f_mid = (1 << 8) % p  # 2**8 mod p
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    af = a_ref[...].astype(jnp.float32)
+    bf = b_ref[...].astype(jnp.float32)
+    a_hi = jnp.floor(af / LIMB)
+    a_lo = af - a_hi * LIMB
+    b_hi = jnp.floor(bf / LIMB)
+    b_lo = bf - b_hi * LIMB
+
+    # Four MXU matmuls per tile; each accumulates <= bk=256 products of
+    # values < 2**16 -> partial sums < 2**24, exact in f32.
+    hh = _modf32(jnp.dot(a_hi, b_hi, preferred_element_type=jnp.float32), pf)
+    mid = _modf32(
+        jnp.dot(a_hi, b_lo, preferred_element_type=jnp.float32)
+        + jnp.dot(a_lo, b_hi, preferred_element_type=jnp.float32),
+        pf,
+    )
+    ll = _modf32(jnp.dot(a_lo, b_lo, preferred_element_type=jnp.float32), pf)
+
+    tile = _modf32(_mulmod_const(hh, f_hihi, p) + _mulmod_const(mid, f_mid, p) + ll, pf)
+    acc = o_ref[...].astype(jnp.float32)
+    o_ref[...] = _modf32(acc + tile, pf).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret")
+)
+def modmatmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    p: int = P_DEFAULT,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """a [M, K] @ b [K, N] mod p; int32 in [0, p). Shapes must be
+    multiples of the block sizes (ops.py handles padding)."""
+    if p >= 1 << 16:
+        raise ValueError("kernel requires p < 2**16")
+    if bk > 256:
+        raise ValueError("bk must be <= 256 for exact f32 accumulation")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_modmatmul_kernel, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,97 @@
+"""Jitted public wrapper around the GF(p) matmul kernel.
+
+Handles padding to tile multiples, batching (vmap over leading dims),
+and backend selection:
+
+* ``"pallas"``    — the Pallas TPU kernel (compiled on TPU, interpret
+                     mode elsewhere; interpret executes the kernel body
+                     in Python for correctness validation on CPU),
+* ``"f32limb"``   — portable jnp path with identical limb math,
+* ``"auto"``      — pallas on TPU backends, f32limb otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.gf import P_DEFAULT, mod_matmul_f32
+from .kernel import modmatmul_pallas
+
+
+def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
+    p0 = (-x.shape[-2]) % mult0
+    p1 = (-x.shape[-1]) % mult1
+    if p0 or p1:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, p0), (0, p1)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "backend", "bm", "bn", "bk", "interpret")
+)
+def mod_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    p: int = P_DEFAULT,
+    backend: str = "auto",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """a [..., M, K] @ b [..., K, N] mod p (int32), batched over leading dims.
+
+    Batch dims of ``a`` and ``b`` must match (or one side may omit them).
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "f32limb"
+
+    if backend == "f32limb":
+        if b.ndim == 2:
+            return mod_matmul_f32(a, b, p)
+        # batched rhs: vmap the portable path
+        batch = a.shape[:-2]
+        af = a.reshape((-1,) + a.shape[-2:])
+        bf = b.reshape((-1,) + b.shape[-2:])
+        out = jax.vmap(lambda x, y: mod_matmul_f32(x, y, p))(af, bf)
+        return out.reshape(batch + out.shape[-2:])
+
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend}")
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+
+    call = functools.partial(
+        modmatmul_pallas, p=p, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    if a.ndim == 2 and b.ndim == 2:
+        out = call(ap, bp)
+    else:
+        batch = a.shape[:-2] or b.shape[:-2]
+        af = jnp.broadcast_to(ap, batch + ap.shape[-2:]).reshape((-1,) + ap.shape[-2:])
+        bf = jnp.broadcast_to(bp, batch + bp.shape[-2:]).reshape((-1,) + bp.shape[-2:])
+        out = jax.vmap(call)(af, bf).reshape(batch + (ap.shape[-2], bp.shape[-1]))
+    return out[..., :m, :n]
+
+
+def polyeval(
+    vander: jnp.ndarray, coeffs: jnp.ndarray, p: int = P_DEFAULT, **kw
+) -> jnp.ndarray:
+    """Evaluate matrix-coefficient polynomials at many points.
+
+    vander: [N, K] powers matrix (alpha_n ** power_k mod p)
+    coeffs: [K, R, C] stacked matrix coefficients
+    returns [N, R, C]: F(alpha_n) = sum_k vander[n, k] * coeffs[k].
+    """
+    k, r, c = coeffs.shape
+    flat = mod_matmul(vander, coeffs.reshape(k, r * c), p=p, **kw)
+    return flat.reshape(vander.shape[0], r, c)

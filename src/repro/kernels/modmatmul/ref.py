@@ -1,0 +1,21 @@
+"""Pure oracle for the modmatmul kernel.
+
+Exact int64 host arithmetic (numpy), chunked so partial sums never
+overflow, plus a jnp oracle built from the same limb identity the
+kernel uses (usable under jit for property tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.gf import Field, P_DEFAULT, mod_matmul_f32
+
+
+def modmatmul_ref(a, b, p: int = P_DEFAULT) -> np.ndarray:
+    """Ground-truth a @ b mod p on the host (numpy int64)."""
+    return Field(p).matmul(np.asarray(a), np.asarray(b))
+
+
+def modmatmul_jnp_ref(a, b, p: int = P_DEFAULT):
+    """Portable jnp oracle (f32 limb math, no Pallas)."""
+    return mod_matmul_f32(a, b, p)

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x applicable shape x mesh) cell this lowers and
+compiles the real step function (train_step / prefill_step /
+serve_step) against ShapeDtypeStruct stand-ins on the production mesh —
+no allocation — and records:
+
+* ``memory_analysis``      (per-device bytes: proves it fits HBM)
+* ``cost_analysis``        (HLO FLOPs / bytes for the roofline)
+* collective bytes by kind (parsed from optimized HLO; cost_analysis
+  does not expose them)
+
+Results land as one JSON per cell under ``--out`` so the sweep is
+resumable after a crash — the harness skips cells whose JSON exists.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config, registry as cfg_registry, shape_applicable
+from ..models.registry import build_model
+from .hlo_cost import analyze as hlo_analyze
+from .mesh import make_production_mesh
+from .steps import build_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    ``-done`` halves of async pairs are skipped so each collective is
+    counted once.  Result bytes approximate per-participant wire bytes
+    (all-reduce is ring-counted 2x by the roofline module).
+    """
+    totals: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=", 1)[1][:120]:
+            continue
+        kind = m.group(1)
+        rhs = line.split("=", 1)[1]
+        prefix = rhs.split(kind)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(prefix):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[kind] += nbytes
+        counts[kind] += 1
+    return dict(totals), dict(counts)
+
+
+def _mem_dict(mem) -> Dict[str, int]:
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        try:
+            out[field] = int(getattr(mem, field))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(cost) -> Dict[str, float]:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+        try:
+            v = cost[k] if not hasattr(cost, "get") else cost.get(k)
+            if v is not None:
+                out[k.replace(" ", "_")] = float(v)
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    verbose: bool = True,
+    hlo_path: str = None,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not shape_applicable(cfg, shape):
+        record["status"] = "skipped"
+        record["reason"] = (
+            "long_500k needs sub-quadratic attention"
+            if shape_name == "long_500k"
+            else "no decode path"
+        )
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = build_model(cfg)
+    bundle = build_step(model, mesh, shape)
+    if shape.kind != "train":
+        cache_abs = model.cache_abstract(shape.global_batch, shape.seq_len)
+        record["cache_bytes"] = int(
+            sum(
+                int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                for s in jax.tree.leaves(cache_abs)
+            )
+        )
+
+    t0 = time.time()
+    with mesh:
+        lowered = bundle.lower()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_kind}] memory_analysis:", mem)
+        print(f"[{arch} x {shape_name} x {mesh_kind}] cost_analysis:",
+              {k: v for k, v in _cost_dict(cost).items()})
+    hlo = compiled.as_text()
+    if hlo_path:
+        import gzip
+
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    coll, coll_counts = collective_bytes(hlo)
+    # loop-aware walker: multiplies scan/while bodies by trip counts
+    # (XLA's cost_analysis counts them once)
+    walk = hlo_analyze(hlo)
+
+    record.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        n_devices=int(mesh.devices.size),
+        memory=_mem_dict(mem),
+        cost=_cost_dict(cost),
+        walker={
+            "flops": walk.flops,
+            "bytes": walk.bytes,
+            "transcendentals": walk.transcendentals,
+            "collective_bytes": walk.collectives,
+            "collective_counts": walk.collective_counts,
+        },
+        collective_bytes=coll,
+        collective_counts=coll_counts,
+        hlo_bytes=len(hlo),
+    )
+    return record
+
+
+def cells(arch_sel: str, shape_sel: str, mesh_sel: str):
+    archs = cfg_registry.ARCH_NAMES if arch_sel == "all" else tuple(arch_sel.split(","))
+    shapes = tuple(SHAPES) if shape_sel == "all" else tuple(shape_sel.split(","))
+    meshes = ("single", "multi") if mesh_sel == "both" else (mesh_sel,)
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                yield a, s, m
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="store gzipped optimized HLO next to each record")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name, mesh_kind in cells(args.arch, args.shape, args.mesh):
+        path = os.path.join(args.out, f"{arch}__{shape_name}__{mesh_kind}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"skip (exists): {path}")
+            continue
+        print(f"=== dry-run {arch} x {shape_name} x {mesh_kind} ===", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, mesh_kind,
+                           hlo_path=path[:-5] + ".hlo.gz" if args.save_hlo else None)
+        except Exception as e:  # fault-tolerant sweep: record and continue
+            rec = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "error", "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"-> {rec.get('status')} ({path})", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Refresh the walker-derived fields of dry-run records from the saved
+gzipped HLO — lets the cost model iterate without recompiling.
+
+    PYTHONPATH=src python -m repro.launch.rewalk results/dryrun
+"""
+import glob
+import gzip
+import json
+import sys
+
+from .dryrun import collective_bytes
+from .hlo_cost import analyze
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for path in sorted(glob.glob(f"{out}/*.json")):
+        hlo_path = path[:-5] + ".hlo.gz"
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        try:
+            hlo = gzip.open(hlo_path, "rt").read()
+        except FileNotFoundError:
+            print(f"no hlo for {path}; skipping")
+            continue
+        walk = analyze(hlo)
+        coll, counts = collective_bytes(hlo)
+        rec["walker"] = {
+            "flops": walk.flops,
+            "bytes": walk.bytes,
+            "transcendentals": walk.transcendentals,
+            "collective_bytes": walk.collectives,
+            "collective_counts": walk.collective_counts,
+        }
+        rec["collective_bytes"] = coll
+        rec["collective_counts"] = counts
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"rewalked {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Production serving driver: batched prefill + decode with the sharded
+KV cache layout of the decode_32k / long_500k cells.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --reduced \
+        --batch 4 --prompt-len 32 --gen-len 32
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..configs import SHAPES, get_config, reduced as reduce_cfg
+from ..models import build_model
+from .mesh import describe, make_elastic_mesh, make_mesh
+from .steps import build_decode_step, build_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mesh", default="elastic")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    if args.mesh == "elastic":
+        mesh = make_elastic_mesh()
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+    print(f"serving {args.arch} on {describe(mesh)}")
+
+    max_len = args.prompt_len + args.gen_len
+    shape = dataclasses.replace(
+        SHAPES["decode_32k"], seq_len=max_len, global_batch=args.batch
+    )
+    pre_shape = dataclasses.replace(
+        SHAPES["prefill_32k"], seq_len=args.prompt_len, global_batch=args.batch
+    )
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(args.batch, max_len)
+        prefill = jax.jit(model.prefill)
+        decode = jax.jit(model.decode_step)
+
+        t0 = time.time()
+        batch = {"tokens": prompts}
+        if cfg.family == "encdec":
+            batch = {
+                "frames": rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32),
+                "tokens": prompts[:, :1],
+            }
+        logits, cache = prefill(params, batch, cache)
+        jax.block_until_ready(logits)
+        t_pre = time.time() - t0
+
+        tok = np.asarray(jnp_argmax(logits, cfg.vocab_size))
+        t0 = time.time()
+        steps = 0
+        for i in range(args.gen_len - 1):
+            pos = np.full((args.batch, 1), args.prompt_len + i, np.int32)
+            logits, cache = decode(params, tok[:, None], cache, pos)
+            tok = np.asarray(jnp_argmax(logits, cfg.vocab_size))
+            steps += 1
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+    print(f"prefill: {t_pre * 1e3:.1f} ms for {args.prompt_len} x {args.batch} tokens")
+    print(f"decode : {dt / max(steps,1) * 1e3:.2f} ms/step (batch {args.batch})")
+
+
+def jnp_argmax(logits, vocab):
+    import jax.numpy as jnp
+
+    return jnp.argmax(logits[:, -1, :vocab], axis=-1).astype(jnp.int32)
+
+
+if __name__ == "__main__":
+    main()

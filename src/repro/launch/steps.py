@@ -1,0 +1,214 @@
+"""Jitted step builders shared by the trainer, the server, and dryrun.
+
+Each builder returns (step_fn, abstract_inputs, in_shardings,
+out_shardings) so callers can either execute on real data or
+``jit(...).lower(*abstract).compile()`` for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import (
+    activation_rules,
+    batch_shardings,
+    cache_shardings,
+    data_axes,
+    param_shardings,
+    use_activation_rules,
+)
+
+
+def _with_rules(fn, rules):
+    def wrapped(*args):
+        with use_activation_rules(rules):
+            return fn(*args)
+
+    return wrapped
+from ..models.common import abstract as abstract_params_tree
+from ..models.registry import Model
+from ..train.optimizer import AdamWConfig, AdamWState, adamw_update, get_schedule
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def abstract_opt_state(params_abs) -> AdamWState:
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t
+    )
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32(params_abs), nu=f32(params_abs)
+    )
+
+
+def opt_state_shardings(param_sh, mesh) -> AdamWState:
+    return AdamWState(step=_replicated(mesh), mu=param_sh, nu=param_sh)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any
+    args_abstract: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jit().lower(*self.args_abstract)
+
+
+# ----------------------------------------------------------------------
+def build_train_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeConfig,
+    lr: float = 3e-4,
+    schedule: str = "cosine",
+    total_steps: int = 10_000,
+    fsdp: bool = True,
+    microbatch_seqs: int = 2,
+) -> StepBundle:
+    """Train step with microbatched gradient accumulation: the global
+    batch is split so each data shard sees ``microbatch_seqs`` sequences
+    per micro-step; activations peak at one micro-step while gradients
+    accumulate in f32 (sharded like the parameters).  Communication is
+    overlapped naturally: each micro-step's grads stay local, a single
+    reduction happens inside the optimizer update."""
+    opt_cfg = AdamWConfig(lr=get_schedule(schedule, lr, total_steps))
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    n_micro = max(1, shape.global_batch // max(1, dp * microbatch_seqs))
+    while shape.global_batch % n_micro:
+        n_micro -= 1
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def micro_step(carry, mb):
+            gsum, loss_sum, aux_sum = carry
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, mb
+            )
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, loss_sum + loss, aux_sum + metrics["aux"]), None
+
+        zero = jnp.zeros((), jnp.float32)
+        (gsum, loss_sum, aux_sum), _ = jax.lax.scan(
+            micro_step, (gzero, zero, zero), micro
+        )
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        loss = loss_sum / n_micro
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {
+            "loss": loss, "xent": loss, "aux": aux_sum / n_micro, **om
+        }
+
+    params_abs = abstract_params_tree(model.abstract_params())
+    opt_abs = abstract_opt_state(params_abs)
+    batch_abs = model.batch_spec(shape)
+
+    p_sh = param_shardings(model.abstract_params(), mesh, fsdp)
+    o_sh = opt_state_shardings(p_sh, mesh)
+    b_sh = batch_shardings(batch_abs, mesh)
+    rep = _replicated(mesh)
+    metric_names = ("loss", "xent", "aux", "grad_norm", "lr")
+    out_sh = (p_sh, o_sh, {k: rep for k in metric_names})
+    return StepBundle(
+        fn=_with_rules(train_step, activation_rules(mesh)),
+        args_abstract=(params_abs, opt_abs, batch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=out_sh,
+        donate_argnums=(0, 1),
+    )
+
+
+# ----------------------------------------------------------------------
+def build_decode_step(
+    model: Model, mesh: Mesh, shape: ShapeConfig, fsdp: bool = True
+) -> StepBundle:
+    """One-token serve step with a KV/state cache of shape.seq_len."""
+    cfg = model.cfg
+    b = shape.global_batch
+    long_ctx = b < mesh.shape.get("data", 1)
+
+    def serve_step(params, caches, tokens, positions):
+        logits, new_caches = model.decode_step(params, tokens, caches, positions)
+        return logits, new_caches
+
+    params_abs = abstract_params_tree(model.abstract_params())
+    cache_abs = model.cache_abstract(b, shape.seq_len)
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    p_sh = param_shardings(model.abstract_params(), mesh, fsdp)
+    c_sh = cache_shardings(cfg, cache_abs, mesh, long_context=long_ctx)
+    da = data_axes(mesh)
+    b_ax = da if len(da) > 1 else (da[0] if da else None)
+    tok_sh = NamedSharding(mesh, P(None if long_ctx else b_ax, None))
+    logits_sh = NamedSharding(mesh, P(None if long_ctx else b_ax, None, "model"))
+    return StepBundle(
+        fn=_with_rules(serve_step, activation_rules(mesh, long_context=long_ctx)),
+        args_abstract=(params_abs, cache_abs, tok_abs, pos_abs),
+        in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+# ----------------------------------------------------------------------
+def build_prefill_step(
+    model: Model, mesh: Mesh, shape: ShapeConfig, fsdp: bool = True
+) -> StepBundle:
+    cfg = model.cfg
+    b = shape.global_batch
+
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches)
+
+    params_abs = abstract_params_tree(model.abstract_params())
+    batch_abs = model.batch_spec(shape)
+    cache_abs = model.cache_abstract(b, shape.seq_len)
+
+    p_sh = param_shardings(model.abstract_params(), mesh, fsdp)
+    b_sh = batch_shardings(batch_abs, mesh)
+    c_sh = cache_shardings(cfg, cache_abs, mesh, long_context=False)
+    da = data_axes(mesh)
+    b_ax = da if len(da) > 1 else (da[0] if da else None)
+    logits_sh = NamedSharding(mesh, P(b_ax, None, "model"))
+    return StepBundle(
+        fn=_with_rules(prefill_step, activation_rules(mesh)),
+        args_abstract=(params_abs, batch_abs, cache_abs),
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(2,),
+    )
+
+
+def build_step(model: Model, mesh: Mesh, shape: ShapeConfig, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(model, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, mesh, shape)
+    if shape.kind == "decode":
+        return build_decode_step(model, mesh, shape)
+    raise KeyError(shape.kind)

@@ -1,0 +1,308 @@
+"""Attention blocks: GQA (with optional QKV bias), MLA (DeepSeek-V2
+latent attention with compressed KV cache), and cross-attention.
+
+All functions are pure: ``(params, inputs, cache) -> (out, cache)``.
+KV caches are preallocated fixed-length buffers updated with
+``dynamic_update_slice`` so decode steps lower to static HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .common import ParamInfo, apply_rope
+
+
+# ----------------------------------------------------------------------
+# GQA
+# ----------------------------------------------------------------------
+def gqa_params(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamInfo]:
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    p = {
+        "wq": ParamInfo((d, h * hd), ("embed", "heads")),
+        "wk": ParamInfo((d, kv * hd), ("embed", "heads")),
+        "wv": ParamInfo((d, kv * hd), ("embed", "heads")),
+        "wo": ParamInfo((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = ParamInfo((h * hd,), ("heads",), init="zeros")
+        p["bk"] = ParamInfo((kv * hd,), ("heads",), init="zeros")
+        p["bv"] = ParamInfo((kv * hd,), ("heads",), init="zeros")
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, -1)
+
+
+def _sdpa_naive(
+    q: jnp.ndarray,  # [B, Tq, H, hd]
+    k: jnp.ndarray,  # [B, Tk, KV, hd]
+    v: jnp.ndarray,  # [B, Tk, KV, hd_v]
+    mask: Optional[jnp.ndarray],  # [B|1, Tq, Tk] bool
+    scale: float,
+) -> jnp.ndarray:
+    """Reference attention; materialises [B, H, Tq, Tk] (tests only)."""
+    b, tq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, tq, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, :][:, :, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, tq, h * v.shape[-1])
+
+
+def _divisor_chunk(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _sdpa_chunked(
+    q: jnp.ndarray,  # [B, Tq, H, hd]
+    k: jnp.ndarray,  # [B, S, KV, hd]
+    v: jnp.ndarray,  # [B, S, KV, hd_v]
+    scale: float,
+    q_positions: Optional[jnp.ndarray] = None,  # [Tq] absolute (None = not causal)
+    kv_limit: Optional[jnp.ndarray] = None,  # scalar: keys >= limit invalid
+    kv_valid: Optional[jnp.ndarray] = None,  # [B|1, S] extra key mask
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax (flash-style) attention: never materialises the
+    [Tq, S] score matrix; peak extra memory is one [qc, kc] block per
+    head.  Handles causal masking via absolute positions, cache-validity
+    limits, and arbitrary key masks — the single attention primitive for
+    train, prefill (cache write), decode, and cross-attention."""
+    b, tq, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    hv = v.shape[-1]
+    qc = _divisor_chunk(tq, q_chunk)
+    kc = _divisor_chunk(s, k_chunk)
+    nq, nk = tq // qc, s // kc
+
+    qg = q.reshape(b, nq, qc, kvh, g, hd)
+    kg = k.reshape(b, nk, kc, kvh, hd)
+    vg = v.reshape(b, nk, kc, kvh, hv)
+    qpos = None if q_positions is None else q_positions.reshape(nq, qc)
+    kvv = None if kv_valid is None else jnp.broadcast_to(
+        kv_valid, (kv_valid.shape[0], s)
+    ).reshape(-1, nk, kc)
+
+    def q_step(_, iq):
+        qb = qg[:, iq]  # [b, qc, kv, g, hd]
+        m0 = jnp.full((b, kvh, g, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, hv), jnp.float32)
+
+        @jax.checkpoint
+        def kv_step(carry, ik):
+            # checkpointed: the [qc, kc] probability block is recomputed
+            # in the backward instead of being stacked across all
+            # (nq, nk) pairs — without this the saved residuals become
+            # the full [Tq, S] score matrix again.
+            m, l, acc = carry
+            kb = kg[:, ik]  # [b, kc, kv, hd]
+            vb = vg[:, ik]
+            sc = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qb, kb, preferred_element_type=jnp.float32
+            ) * scale  # [b, kv, g, qc, kc]
+            kpos = ik * kc + jnp.arange(kc)
+            mask = jnp.ones((1, 1, 1, qc, kc), bool)
+            if qpos is not None:
+                mask = mask & (kpos[None, :] <= qpos[iq][:, None])[None, None, None]
+            if kv_limit is not None:
+                mask = mask & (kpos < kv_limit)[None, None, None, None, :]
+            if kvv is not None:
+                mask = mask & kvv[:, ik][:, None, None, None, :]
+            sc = jnp.where(mask, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [b, kv, g, qc, hv]
+        return None, out.transpose(0, 3, 1, 2, 4)  # [b, qc, kv, g, hv]
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # [nq, b, qc, kv, g, hv]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tq, h * hv)
+    return out.astype(q.dtype)
+
+
+def gqa_attention(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # [B, T, d]
+    positions: jnp.ndarray,  # [B, T]
+    cfg: ModelConfig,
+    kv_x: Optional[jnp.ndarray] = None,  # cross attention source
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_valid: Optional[jnp.ndarray] = None,  # [Tk] or [B, Tk] bool
+    impl: str = "chunked",
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    dt = x.dtype
+    src = x if kv_x is None else kv_x
+    q = x @ p["wq"].astype(dt)
+    k = src @ p["wk"].astype(dt)
+    v = src @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = constrain(_split_heads(q, h), ("batch", "seq", "heads", None))
+    k = constrain(_split_heads(k, kv), ("batch", "seq", "heads", None))
+    v = constrain(_split_heads(v, kv), ("batch", "seq", "heads", None))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    if cache is None:
+        if use_rope:
+            kpos = positions if kv_x is None else jnp.arange(src.shape[1])[None, :]
+            k = apply_rope(k, kpos, cfg.rope_theta)
+        if impl == "naive":
+            tq, tk = q.shape[1], k.shape[1]
+            mask = None
+            if causal:
+                mask = (jnp.arange(tk)[None, :] <= jnp.arange(tq)[:, None])[None]
+            if kv_valid is not None:
+                kvm = (
+                    kv_valid[:, None, :] if kv_valid.ndim == 2 else kv_valid[None, None, :]
+                )
+                mask = kvm if mask is None else (mask & kvm)
+            out = _sdpa_naive(q, k, v, mask, scale)
+        else:
+            kvv = None
+            if kv_valid is not None:
+                kvv = kv_valid if kv_valid.ndim == 2 else kv_valid[None, :]
+            out = _sdpa_chunked(
+                q, k, v, scale,
+                q_positions=positions[0] if causal else None,
+                kv_valid=kvv,
+            )
+        return out @ p["wo"].astype(dt), None
+
+    # decode/prefill-with-cache: append T tokens at cache["idx"], attend
+    # causally over the valid prefix (works for T == 1 and T == seq).
+    idx = cache["idx"]
+    if use_rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, 1)
+    tq = q.shape[1]
+    out = _sdpa_chunked(
+        q, ck.astype(dt), cv.astype(dt), scale, q_positions=idx + jnp.arange(tq)
+    )
+    new_cache = {"k": ck, "v": cv, "idx": idx + tq}
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, kv, hd), dtype),
+        "idx": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV with decoupled RoPE head
+# ----------------------------------------------------------------------
+def mla_params(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": ParamInfo((d, h * qd), ("embed", "heads")),
+        "w_dkv": ParamInfo((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None)),
+        "w_uk": ParamInfo((m.kv_lora_rank, h * m.qk_nope_head_dim), (None, "heads")),
+        "w_uv": ParamInfo((m.kv_lora_rank, h * m.v_head_dim), (None, "heads")),
+        "wo": ParamInfo((h * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def mla_attention(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Absorbed-form MLA: with q' = [q_nope W_uk | q_rope] and
+    k' = [c | k_rope] the score is exactly a single-kv-head attention in
+    the (r + rd)-dim latent space with v' = c — so the flash-chunked
+    GQA primitive is reused and the cache stays compressed."""
+    m = cfg.mla
+    h = cfg.num_heads
+    dt = x.dtype
+    b, t, _ = x.shape
+    nd, rd, vd, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = (x @ p["wq"].astype(dt)).reshape(b, t, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ p["w_dkv"].astype(dt)  # [B, T, r + rd]
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        idx = cache["idx"]
+        c = jax.lax.dynamic_update_slice_in_dim(cache["c"], c.astype(cache["c"].dtype), idx, 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, 1
+        )
+        new_cache = {"c": c, "k_rope": k_rope, "idx": idx + t}
+        c = c.astype(dt)
+        k_rope = k_rope.astype(dt)
+        q_positions = idx + jnp.arange(t)
+    else:
+        new_cache = None
+        q_positions = jnp.arange(t)
+
+    wuk = p["w_uk"].astype(dt).reshape(r, h, nd)
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, wuk)  # [B,T,H,r]
+    q_prime = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,T,H,r+rd]
+    k_prime = jnp.concatenate([c, k_rope], axis=-1)[:, :, None, :]  # [B,S,1,r+rd]
+    v_prime = c[:, :, None, :]  # [B,S,1,r]
+    ctx = _sdpa_chunked(
+        q_prime,
+        k_prime,
+        v_prime,
+        scale=1.0 / math.sqrt(nd + rd),
+        q_positions=q_positions,
+    ).reshape(b, t, h, r)
+    wuv = p["w_uv"].astype(dt).reshape(r, h, vd)
+    out = jnp.einsum("bthr,rhv->bthv", ctx, wuv).reshape(b, t, h * vd)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), dtype),
+        "idx": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,140 @@
+"""Feed-forward blocks: SwiGLU MLP and token-choice MoE.
+
+The MoE uses sort-based capacity dispatch (no giant one-hot tensors):
+(token, k) pairs are ordered by expert id, ranked within their expert,
+dropped past capacity, scattered into a dense [experts, capacity, d]
+buffer, run through batched expert matmuls, and combined back with the
+router gates.  Shapes are fully static — dry-run friendly — and the
+experts axis carries the ``experts`` logical axis so expert parallelism
+falls out of the sharding rules.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..distributed.sharding import constrain
+from .common import ParamInfo
+
+
+def mlp_params(d: int, ff: int) -> Dict[str, ParamInfo]:
+    return {
+        "w_gate": ParamInfo((d, ff), ("embed", "ff")),
+        "w_up": ParamInfo((d, ff), ("embed", "ff")),
+        "w_down": ParamInfo((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    return (
+        jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    ) @ p["w_down"].astype(dt)
+
+
+# ----------------------------------------------------------------------
+# MoE
+# ----------------------------------------------------------------------
+def moe_params(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    m = cfg.moe
+    d, ffe = cfg.d_model, m.d_ff_expert
+    e = m.num_experts
+    e_ax = None if m.expert_tp else "experts"
+    p = {
+        "router": ParamInfo((d, e), ("embed", None), init="small"),
+        "w_gate": ParamInfo((e, d, ffe), (e_ax, "embed", "ff")),
+        "w_up": ParamInfo((e, d, ffe), (e_ax, "embed", "ff")),
+        "w_down": ParamInfo((e, ffe, d), (e_ax, "ff", "embed")),
+    }
+    if m.num_shared_experts:
+        p["shared"] = mlp_params(d, ffe * m.num_shared_experts)
+    return p
+
+
+def moe_ffn(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d].  Returns (out, aux_loss).
+
+    ``dispatch_groups > 1`` switches to group-local dispatch: the
+    argsort/rank/scatter machinery runs independently inside G token
+    groups (aligned with the data shards), so GSPMD never gathers the
+    global token array — only the [G, E, C, d] expert buffer crosses
+    shards (the minimal expert-parallel all-to-all).  See
+    EXPERIMENTS.md §Perf (dbrx hillclimb).
+    """
+    m = cfg.moe
+    dt = x.dtype
+    b, t, d = x.shape
+    n = b * t
+    e, k = m.num_experts, m.num_experts_per_tok
+    g = max(1, m.dispatch_groups)
+    while n % g:
+        g -= 1
+    ng = n // g  # tokens per group
+    cap = int(max(1, (ng * k * m.capacity_factor) // e))
+
+    xf = x.reshape(g, ng, d)
+    xf = constrain(xf, ("batch", None, None))
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)  # [g, ng, e]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)  # [g, ng, k]
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style, global statistics)
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (n * k)
+    aux = m.router_aux_weight * e * jnp.sum(me * ce)
+
+    # ----- group-local sort-based dispatch ------------------------------------
+    flat_e = eidx.reshape(g, ng * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # pairs grouped by expert
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jnp.zeros((g, e), jnp.int32).at[
+        jnp.arange(g)[:, None], flat_e
+    ].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((g, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]], axis=-1
+    )
+    rank_in_expert = jnp.arange(ng * k, dtype=jnp.int32)[None] - jnp.take_along_axis(
+        offsets, sorted_e, axis=-1
+    )
+    keep = rank_in_expert < cap
+    token_of = order // k  # source token within group
+
+    gi = jnp.arange(g)[:, None]
+    slot_e = jnp.where(keep, sorted_e, e - 1)
+    slot_c = jnp.where(keep, rank_in_expert, cap - 1)
+    contrib = jnp.where(keep[..., None], jnp.take_along_axis(
+        xf, token_of[..., None], axis=1
+    ), 0.0)
+    e_ax = None if m.expert_tp else "experts"
+    buf = jnp.zeros((g, e, cap, d), dt)
+    buf = buf.at[gi, slot_e, slot_c].add(contrib, mode="drop")
+    buf = constrain(buf, ("batch", e_ax, None, None))
+
+    # ----- expert compute: expert parallel (experts over "model") or
+    # expert-TP (FFN hidden over "model"; dispatch stays shard-local) ---
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt)))
+    hidden = hidden * jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    if m.expert_tp:
+        hidden = constrain(hidden, ("batch", None, None, "heads"))
+    out_buf = constrain(
+        jnp.einsum("gecf,efd->gecd", hidden, p["w_down"].astype(dt)),
+        ("batch", e_ax, None, None),
+    )
+
+    # ----- combine (group-local) ----------------------------------------------
+    pair_gate = jnp.take_along_axis(gates.reshape(g, ng * k), order, axis=-1).astype(dt)
+    gathered = out_buf[gi, slot_e, slot_c] * jnp.where(
+        keep, pair_gate, 0.0
+    )[..., None]
+    out = jnp.zeros((g, ng, d), dt).at[gi, token_of].add(gathered)
+    out = constrain(out, ("batch", None, None))
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xf)
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,237 @@
+"""Recurrent-family assemblies: xLSTM (ssm family) and Zamba2 (hybrid).
+
+xLSTM groups layers as [1 sLSTM + (k-1) mLSTM] * G so each group scans
+its uniform mLSTM stack (``num_layers % slstm_every == 0``).
+
+Zamba2: a trunk of Mamba2 layers with ONE globally-shared attention+MLP
+block applied every ``shared_attn_every`` layers; each invocation gets
+its own low-rank LoRA delta on the shared projections and its own KV
+cache.  Both are sub-quadratic and run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .attention import gqa_attention, gqa_cache_spec, gqa_params
+from .common import ParamInfo, remat_wrap, rms_norm, softmax_xent
+from .ffn import mlp, mlp_params
+from .lm import _embed_tokens, _logits, stack_infos
+from .ssm import (
+    mamba_cache_spec,
+    mamba_decode_step,
+    mamba_params,
+    mamba_scan,
+)
+from .xlstm import (
+    mlstm_cache_spec,
+    mlstm_decode_step,
+    mlstm_params,
+    mlstm_scan,
+    slstm_cache_spec,
+    slstm_decode_step,
+    slstm_params,
+    slstm_scan,
+)
+
+
+# ----------------------------------------------------------------------
+# xLSTM
+# ----------------------------------------------------------------------
+def xlstm_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    k = cfg.xlstm.slstm_every
+    assert cfg.num_layers % k == 0, "num_layers must divide slstm_every"
+    g = cfg.num_layers // k
+    per_s = {"ln": ParamInfo((d,), ("embed",), init="ones"), "core": slstm_params(cfg)}
+    per_m = {"ln": ParamInfo((d,), ("embed",), init="ones"), "core": mlstm_params(cfg)}
+    return {
+        "embed": ParamInfo((v, d), ("vocab", "embed"), init="embed"),
+        "slstm": stack_infos(per_s, g),
+        "mlstm": stack_infos(stack_infos(per_m, k - 1), g),
+        "final_norm": ParamInfo((d,), ("embed",), init="ones"),
+        "lm_head": ParamInfo((d, v), ("embed", "vocab")),
+    }
+
+
+def xlstm_forward(
+    cfg: ModelConfig, params, batch, caches=None, positions=None, head_mode="full",
+    prefill=False,
+):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(cfg, params, batch["tokens"], dt)
+    decode = caches is not None and not prefill
+
+    def m_body(xc, inp):
+        xc = constrain(xc, ("batch", "seq", None))
+        pl, cache_l = inp
+        h = rms_norm(xc, pl["ln"], cfg.norm_eps)
+        if decode:
+            out, nc = mlstm_decode_step(pl["core"], h, cache_l, cfg)
+        elif prefill:
+            out, nc = mlstm_scan(pl["core"], h, cfg, return_state=True)
+        else:
+            out, nc = mlstm_scan(pl["core"], h, cfg), None
+        return xc + out, nc
+
+    def group(xc, inp):
+        ps, pm, cs, cm = inp
+        h = rms_norm(xc, ps["ln"], cfg.norm_eps)
+        if decode:
+            out, ncs = slstm_decode_step(ps["core"], h, cs, cfg)
+        elif prefill:
+            out, ncs = slstm_scan(ps["core"], h, cfg, return_state=True)
+        else:
+            out, ncs = slstm_scan(ps["core"], h, cfg), None
+        xc = xc + out
+        xc, ncm = jax.lax.scan(m_body, xc, (pm, cm))
+        return xc, (ncs, ncm)
+
+    group = remat_wrap(group, cfg.remat_policy)
+    cs = caches["slstm"] if decode else None
+    cm = caches["mlstm"] if decode else None
+    x, (ncs, ncm) = jax.lax.scan(group, x, (params["slstm"], params["mlstm"], cs, cm))
+    new_caches = {"slstm": ncs, "mlstm": ncm} if (decode or prefill) else None
+    return _logits(cfg, params, x, head_mode), new_caches, jnp.zeros((), jnp.float32)
+
+
+def xlstm_cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    k = cfg.xlstm.slstm_every
+    g = cfg.num_layers // k
+    s = slstm_cache_spec(cfg, batch)
+    m = mlstm_cache_spec(cfg, batch)
+    stk = lambda tree, *dims: jax.tree.map(
+        lambda sp: jax.ShapeDtypeStruct(dims + sp.shape, sp.dtype), tree
+    )
+    return {"slstm": stk(s, g), "mlstm": stk(m, g, k - 1)}
+
+
+# ----------------------------------------------------------------------
+# Zamba2
+# ----------------------------------------------------------------------
+def zamba_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    hb = cfg.hybrid
+    n_inv = (cfg.num_layers + hb.shared_attn_every - 1) // hb.shared_attn_every
+    r = hb.lora_rank
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    per_m = {"ln": ParamInfo((d,), ("embed",), init="ones"), "core": mamba_params(cfg)}
+    shared = {
+        "ln_attn": ParamInfo((d,), ("embed",), init="ones"),
+        "ln_mlp": ParamInfo((d,), ("embed",), init="ones"),
+        "attn": gqa_params(cfg),
+        "mlp": mlp_params(d, cfg.d_ff),
+    }
+    lora = {
+        "a_q": ParamInfo((n_inv, d, r), (None, "embed", "lora"), init="small"),
+        "b_q": ParamInfo((n_inv, r, h * hd), (None, "lora", "heads"), init="zeros"),
+    }
+    return {
+        "embed": ParamInfo((v, d), ("vocab", "embed"), init="embed"),
+        "mamba": stack_infos(per_m, cfg.num_layers),
+        "shared": shared,
+        "lora": lora,
+        "final_norm": ParamInfo((d,), ("embed",), init="ones"),
+        "lm_head": ParamInfo((d, v), ("embed", "vocab")),
+    }
+
+
+def _shared_block(cfg, shared, lora, inv, x, positions, cache_inv):
+    """Apply the shared attention+MLP block with invocation-``inv`` LoRA."""
+    dt = x.dtype
+    h = rms_norm(x, shared["ln_attn"], cfg.norm_eps)
+    a_q = jax.lax.dynamic_index_in_dim(lora["a_q"], inv, 0, keepdims=False)
+    b_q = jax.lax.dynamic_index_in_dim(lora["b_q"], inv, 0, keepdims=False)
+    delta_q = (h @ a_q.astype(dt)) @ b_q.astype(dt)
+    attn, new_cache = gqa_attention(shared["attn"], h, positions, cfg, cache=cache_inv)
+    x = x + attn + delta_q
+    h = rms_norm(x, shared["ln_mlp"], cfg.norm_eps)
+    return x + mlp(shared["mlp"], h), new_cache
+
+
+def zamba_forward(
+    cfg: ModelConfig, params, batch, caches=None, positions=None, head_mode="full",
+    prefill=False,
+):
+    """Grouped execution: the shared attention block fires at layers
+    0, k, 2k, ... — the trunk is reshaped to [n_inv, k] so each
+    invocation uses STATIC indices into the shared KV cache and LoRA
+    stacks (the previous cond-in-scan formulation copied the multi-GB
+    shared cache on every layer; see EXPERIMENTS.md §Perf, zamba cell)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(cfg, params, batch["tokens"], dt)
+    decode = caches is not None and not prefill
+    use_cache = caches is not None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    k = cfg.hybrid.shared_attn_every
+    n_layers = cfg.num_layers
+    assert n_layers % k == 0, "num_layers must divide shared_attn_every"
+    n_inv = n_layers // k
+
+    # regroup the stacked per-layer trees into [n_inv, k, ...]
+    regroup = lambda tree: jax.tree.map(
+        lambda a: a.reshape((n_inv, k) + a.shape[1:]), tree
+    )
+    pm_g = regroup(params["mamba"])
+    cm_g = regroup(caches["mamba"]) if decode else None
+
+    def mamba_body(xc, inp):
+        xc = constrain(xc, ("batch", "seq", None))
+        pm, cm = inp
+        h = rms_norm(xc, pm["ln"], cfg.norm_eps)
+        if decode:
+            out, ncm = mamba_decode_step(pm["core"], h, cm, cfg)
+        elif prefill:
+            out, ncm = mamba_scan(pm["core"], h, cfg, return_state=True)
+        else:
+            out, ncm = mamba_scan(pm["core"], h, cfg), None
+        return xc + out, ncm
+
+    mamba_body = remat_wrap(mamba_body, cfg.remat_policy)
+
+    new_shared = caches["shared"] if use_cache else None
+    new_mamba = []
+    for inv in range(n_inv):
+        cache_inv = (
+            jax.tree.map(lambda c, _i=inv: c[_i], caches["shared"])
+            if use_cache
+            else None
+        )
+        x, nc = _shared_block(
+            cfg, params["shared"], params["lora"], inv, x, positions, cache_inv
+        )
+        if use_cache:
+            new_shared = jax.tree.map(
+                lambda buf, c, _i=inv: buf.at[_i].set(c), new_shared, nc
+            )
+        pm_i = jax.tree.map(lambda a, _i=inv: a[_i], pm_g)
+        cm_i = jax.tree.map(lambda a, _i=inv: a[_i], cm_g) if decode else None
+        x, ncm = jax.lax.scan(mamba_body, x, (pm_i, cm_i))
+        new_mamba.append(ncm)
+
+    new_caches = None
+    if use_cache or prefill:
+        ncm_all = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba)
+        new_caches = {
+            "shared": new_shared if use_cache else None,
+            "mamba": ncm_all,
+        }
+    return _logits(cfg, params, x, head_mode), new_caches, jnp.zeros((), jnp.float32)
+
+
+def zamba_cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    hb = cfg.hybrid
+    n_inv = (cfg.num_layers + hb.shared_attn_every - 1) // hb.shared_attn_every
+    attn = gqa_cache_spec(cfg, batch, max_len)
+    stk = lambda tree, *dims: jax.tree.map(
+        lambda sp: jax.ShapeDtypeStruct(dims + sp.shape, sp.dtype), tree
+    )
+    return {
+        "shared": stk(attn, n_inv),
+        "mamba": stk(mamba_cache_spec(cfg, batch), cfg.num_layers),
+    }

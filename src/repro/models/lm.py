@@ -1,0 +1,377 @@
+"""Decoder-only and encoder-decoder language models.
+
+Assembly rules:
+
+* parameters for the repeated trunk are *stacked* along a leading
+  ``layers`` axis and executed with ``lax.scan`` — compile time is
+  O(1) in depth, which keeps the 512-device dry-runs tractable,
+* the block body is wrapped with the configured remat policy,
+* caches are scan xs/ys so decode lowers to a single fused while-loop,
+* MoE aux losses ride in the scan carry.
+
+Families covered here: ``dense``, ``moe`` (incl. MLA attention and
+deepseek-style dense first layers), ``vlm`` (vision-embed stub +
+decoder trunk), ``encdec`` (audio-frame stub encoder + text decoder).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .attention import (
+    gqa_attention,
+    gqa_cache_spec,
+    gqa_params,
+    mla_attention,
+    mla_cache_spec,
+    mla_params,
+)
+from .common import (
+    ParamInfo,
+    chunked_softmax_xent,
+    materialize,
+    remat_wrap,
+    rms_norm,
+    softmax_xent,
+)
+from .ffn import mlp, mlp_params, moe_ffn, moe_params
+
+
+def _is_info(x):
+    return isinstance(x, ParamInfo)
+
+
+def stack_infos(tree, n: int):
+    return jax.tree.map(
+        lambda i: ParamInfo((n,) + i.shape, ("layers",) + i.axes, i.init, i.dtype),
+        tree,
+        is_leaf=_is_info,
+    )
+
+
+# ----------------------------------------------------------------------
+# decoder-only block
+# ----------------------------------------------------------------------
+def _block_infos(cfg: ModelConfig, moe_layer: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "ln_attn": ParamInfo((d,), ("embed",), init="ones"),
+        "ln_mlp": ParamInfo((d,), ("embed",), init="ones"),
+    }
+    p["attn"] = mla_params(cfg) if cfg.mla else gqa_params(cfg)
+    if moe_layer and cfg.moe:
+        p["moe"] = moe_params(cfg)
+    else:
+        ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+        p["mlp"] = mlp_params(d, ff)
+    return p
+
+
+def _block_apply(
+    cfg: ModelConfig,
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    res_scale = jnp.asarray(cfg.scale_residual, x.dtype)
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    if cfg.mla:
+        attn_out, new_cache = mla_attention(p["attn"], h, positions, cfg, cache=cache)
+    else:
+        attn_out, new_cache = gqa_attention(p["attn"], h, positions, cfg, cache=cache)
+    x = x + attn_out * res_scale
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        ffn_out, aux = moe_ffn(p["moe"], h, cfg)
+    else:
+        ffn_out = mlp(p["mlp"], h)
+    x = x + ffn_out * res_scale
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# decoder-only model
+# ----------------------------------------------------------------------
+def decoder_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    dense_set = set(cfg.moe.dense_layers) if cfg.moe else set()
+    n_scan = cfg.num_layers - len(dense_set)
+    params: Dict[str, Any] = {
+        "embed": ParamInfo((v, d), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamInfo((d,), ("embed",), init="ones"),
+        "layers": stack_infos(_block_infos(cfg, moe_layer=True), n_scan),
+    }
+    for i in sorted(dense_set):
+        params[f"dense_layer_{i}"] = _block_infos(cfg, moe_layer=False)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ParamInfo((d, v), ("embed", "vocab"))
+    return params
+
+
+def _trunk(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    caches: Optional[Dict] = None,
+):
+    """Run all blocks (dense prologue layers + scanned trunk)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    dense_set = sorted(set(cfg.moe.dense_layers)) if cfg.moe else []
+    for i in dense_set:
+        c = caches[f"dense_{i}"] if caches else None
+        x, nc, aux = _block_apply(cfg, params[f"dense_layer_{i}"], x, positions, c)
+        aux_total = aux_total + aux
+        if caches:
+            caches = dict(caches)
+            caches[f"dense_{i}"] = nc
+
+    def body(carry, inp):
+        xc, aux_c = carry
+        xc = constrain(xc, ("batch", "seq", None))
+        pl, cache_l = inp
+        xo, new_cache, aux = _block_apply(cfg, pl, xc, positions, cache_l)
+        xo = constrain(xo, ("batch", "seq", None))
+        return (xo, aux_c + aux), new_cache
+
+    body = remat_wrap(body, cfg.remat_policy)
+    scan_caches = caches["layers"] if caches else None
+    if cfg.scan_layers:
+        (x, aux_total), new_scan_caches = jax.lax.scan(
+            body, (x, aux_total), (params["layers"], scan_caches)
+        )
+    else:
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        new_list = []
+        for i in range(n):
+            pl = jax.tree.map(lambda a: a[i], params["layers"])
+            cl = jax.tree.map(lambda a: a[i], scan_caches) if scan_caches is not None else None
+            (x, aux_total), nc = body((x, aux_total), (pl, cl))
+            new_list.append(nc)
+        new_scan_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if caches else None
+        )
+    new_caches = None
+    if caches is not None:
+        new_caches = dict(caches)
+        new_caches["layers"] = new_scan_caches
+    return x, new_caches, aux_total
+
+
+def _head(cfg: ModelConfig, params) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _logits(cfg: ModelConfig, params, x, head_mode: str = "full"):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if head_mode == "none":
+        return x
+    if head_mode == "last":
+        x = x[:, -1:]
+    dt = x.dtype
+    return (x @ _head(cfg, params).astype(dt)) * jnp.asarray(cfg.logit_scale, dt)
+
+
+def _embed_tokens(cfg: ModelConfig, params, tokens, dtype):
+    x = params["embed"][tokens].astype(dtype)
+    return x * jnp.asarray(cfg.scale_emb, dtype)
+
+
+def decoder_forward(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    caches: Optional[Dict] = None,
+    positions: Optional[jnp.ndarray] = None,
+    head_mode: str = "full",
+):
+    """Returns (logits | hidden, new_caches, aux)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens, dt)
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dt), x], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = constrain(x, ("batch", "seq", None))
+    x, new_caches, aux = _trunk(cfg, params, x, positions, caches)
+    return _logits(cfg, params, x, head_mode), new_caches, aux
+
+
+def decoder_loss(cfg: ModelConfig, params, batch):
+    hidden, _, aux = decoder_forward(cfg, params, batch, head_mode="none")
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patches" in batch:
+        pad = jnp.full(batch["patches"].shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = chunked_softmax_xent(
+        hidden, _head(cfg, params), labels, logit_scale=cfg.logit_scale,
+        n_vocab=cfg.vocab_size,
+    )
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def decoder_cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    spec = mla_cache_spec if cfg.mla else gqa_cache_spec
+    per_layer = spec(cfg, batch, max_len)
+    dense_set = sorted(set(cfg.moe.dense_layers)) if cfg.moe else []
+    n_scan = cfg.num_layers - len(dense_set)
+    caches: Dict[str, Any] = {
+        "layers": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_scan,) + s.shape, s.dtype), per_layer
+        )
+    }
+    for i in dense_set:
+        caches[f"dense_{i}"] = per_layer
+    return caches
+
+
+def decoder_decode_step(cfg: ModelConfig, params, tokens, caches, positions):
+    """One decode step: tokens [B, 1]; positions [B, 1] absolute."""
+    logits, new_caches, _ = decoder_forward(
+        cfg, params, {"tokens": tokens}, caches=caches, positions=positions
+    )
+    return logits, new_caches
+
+
+def decoder_prefill(cfg: ModelConfig, params, batch, caches):
+    """Prefill: write the prompt into the caches, return last logits."""
+    logits, new_caches, _ = decoder_forward(
+        cfg, params, batch, caches=caches, head_mode="last"
+    )
+    return logits, new_caches
+
+
+# ----------------------------------------------------------------------
+# encoder-decoder (seamless-style backbone; modality frontend is a stub)
+# ----------------------------------------------------------------------
+def _enc_block_infos(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln_attn": ParamInfo((d,), ("embed",), init="ones"),
+        "ln_mlp": ParamInfo((d,), ("embed",), init="ones"),
+        "attn": gqa_params(cfg),
+        "mlp": mlp_params(d, cfg.d_ff),
+    }
+
+
+def _dec_block_infos(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln_self": ParamInfo((d,), ("embed",), init="ones"),
+        "ln_cross": ParamInfo((d,), ("embed",), init="ones"),
+        "ln_mlp": ParamInfo((d,), ("embed",), init="ones"),
+        "self_attn": gqa_params(cfg),
+        "cross_attn": gqa_params(cfg, cross=True),
+        "mlp": mlp_params(d, cfg.d_ff),
+    }
+
+
+def encdec_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ParamInfo((v, d), ("vocab", "embed"), init="embed"),
+        "enc_layers": stack_infos(_enc_block_infos(cfg), cfg.enc_layers),
+        "enc_norm": ParamInfo((d,), ("embed",), init="ones"),
+        "dec_layers": stack_infos(_dec_block_infos(cfg), cfg.dec_layers),
+        "final_norm": ParamInfo((d,), ("embed",), init="ones"),
+        "lm_head": ParamInfo((d, v), ("embed", "vocab")),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: [B, Te, d] precomputed modality embeddings (stub frontend)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(carry, pl):
+        xc = carry
+        xc = constrain(xc, ("batch", "seq", None))
+        h = rms_norm(xc, pl["ln_attn"], cfg.norm_eps)
+        attn, _ = gqa_attention(pl["attn"], h, positions, cfg, causal=False)
+        xc = xc + attn
+        h = rms_norm(xc, pl["ln_mlp"], cfg.norm_eps)
+        return xc + mlp(pl["mlp"], h), None
+
+    body = remat_wrap(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_apply(cfg, pl, x, positions, enc_out, cache, enc_valid=None):
+    h = rms_norm(x, pl["ln_self"], cfg.norm_eps)
+    attn, new_cache = gqa_attention(pl["self_attn"], h, positions, cfg, cache=cache)
+    x = x + attn
+    h = rms_norm(x, pl["ln_cross"], cfg.norm_eps)
+    cross, _ = gqa_attention(
+        pl["cross_attn"],
+        h,
+        positions,
+        cfg,
+        kv_x=enc_out,
+        causal=False,
+        use_rope=False,
+        kv_valid=enc_valid,
+    )
+    x = x + cross
+    h = rms_norm(x, pl["ln_mlp"], cfg.norm_eps)
+    return x + mlp(pl["mlp"], h), new_cache
+
+
+def decode_stack(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    enc_out,
+    caches=None,
+    positions=None,
+    head_mode="full",
+    enc_len=None,
+):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(cfg, params, tokens, dt)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    enc_valid = None
+    if enc_len is not None:
+        enc_valid = jnp.arange(enc_out.shape[1]) < enc_len
+
+    def body(carry, inp):
+        xc = constrain(carry, ("batch", "seq", None))
+        pl, cache_l = inp
+        xo, nc = _dec_block_apply(cfg, pl, xc, positions, enc_out, cache_l, enc_valid)
+        return xo, nc
+
+    body = remat_wrap(body, cfg.remat_policy)
+    scan_caches = caches["layers"] if caches else None
+    x, new_scan = jax.lax.scan(body, x, (params["dec_layers"], scan_caches))
+    new_caches = {"layers": new_scan} if caches is not None else None
+    return _logits(cfg, params, x, head_mode), new_caches
+
+
+def encdec_loss(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden, _ = decode_stack(cfg, params, batch["tokens"], enc_out, head_mode="none")
+    loss = chunked_softmax_xent(
+        hidden, _head(cfg, params), batch["labels"], logit_scale=cfg.logit_scale,
+        n_vocab=cfg.vocab_size,
+    )
+    return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def encdec_cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    per_layer = gqa_cache_spec(cfg, batch, max_len)
+    return {
+        "layers": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.dec_layers,) + s.shape, s.dtype),
+            per_layer,
+        )
+    }

@@ -1,0 +1,198 @@
+"""Model registry: one uniform interface over all families.
+
+``build_model(cfg)`` returns a ``Model`` exposing:
+
+* ``abstract_params()``  — ParamInfo tree (drives init / dry-run / sharding)
+* ``init(rng)``          — materialized parameters
+* ``loss(params, batch)``— scalar train loss + metrics
+* ``forward``            — logits (prefill path)
+* ``decode_step``        — one-token step with caches
+* ``cache_abstract``     — ShapeDtypeStruct cache tree
+* ``batch_spec(shape)``  — abstract input batch for a ShapeConfig cell
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import hybrid, lm
+from .common import ParamInfo, materialize
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    abstract_params: Callable[[], Dict[str, Any]]
+    loss: Callable
+    forward: Callable
+    decode_step: Callable
+    cache_abstract: Callable
+    prefill: Optional[Callable] = None  # (params, batch, caches) -> (last_logits, caches)
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        return materialize(self.abstract_params(), rng)
+
+    def init_cache(self, batch: int, max_len: int):
+        """Concrete initial caches.  Stabiliser leaves (``m``) start at
+        -1e30 (empty-history max); everything else at zero."""
+
+        def leaf(path, s):
+            last = path[-1]
+            name = getattr(last, "key", None) or str(last)
+            if name == "m":
+                return jnp.full(s.shape, -1e30, s.dtype)
+            return jnp.zeros(s.shape, s.dtype)
+
+        return jax.tree_util.tree_map_with_path(
+            leaf, self.cache_abstract(batch, max_len)
+        )
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Abstract inputs for one workload cell (no device allocation)."""
+        cfg = self.cfg
+        b, t = shape.global_batch, shape.seq_len
+        tok = lambda n: jax.ShapeDtypeStruct((b, n), jnp.int32)
+        emb = lambda n: jax.ShapeDtypeStruct((b, n, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            dec_t = 1 if shape.kind == "decode" else max(t // 8, 16)
+            spec = {"frames": emb(t), "tokens": tok(dec_t)}
+            if shape.kind == "train":
+                spec["labels"] = tok(dec_t)
+            return spec
+        if cfg.family == "vlm":
+            pt = min(cfg.frontend_len, t // 4)
+            if shape.kind == "decode":
+                return {"tokens": tok(1)}
+            spec = {"patches": emb(pt), "tokens": tok(t - pt)}
+            if shape.kind == "train":
+                spec["labels"] = tok(t - pt)
+            return spec
+        if shape.kind == "decode":
+            return {"tokens": tok(1)}
+        spec = {"tokens": tok(t)}
+        if shape.kind == "train":
+            spec["labels"] = tok(t)
+        return spec
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            abstract_params=lambda: lm.decoder_abstract(cfg),
+            loss=lambda p, b: lm.decoder_loss(cfg, p, b),
+            forward=lambda p, b: lm.decoder_forward(cfg, p, b)[0],
+            decode_step=lambda p, tok, caches, pos: lm.decoder_decode_step(
+                cfg, p, tok, caches, pos
+            ),
+            cache_abstract=lambda batch, max_len: lm.decoder_cache_abstract(
+                cfg, batch, max_len
+            ),
+            prefill=lambda p, b, caches: lm.decoder_prefill(cfg, p, b, caches),
+        )
+    if fam == "encdec":
+
+        def _decode_step(p, tok, caches, pos):
+            logits, new_layers = lm.decode_stack(
+                cfg,
+                p,
+                tok,
+                caches["enc_out"],
+                {"layers": caches["layers"]},
+                pos,
+                enc_len=caches.get("enc_len"),
+            )
+            return logits, {**caches, "layers": new_layers["layers"]}
+
+        def _cache_abstract(batch, max_len):
+            c = lm.encdec_cache_abstract(cfg, batch, max_len)
+            c["enc_out"] = jax.ShapeDtypeStruct(
+                (batch, max_len, cfg.d_model), jnp.bfloat16
+            )
+            c["enc_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+            return c
+
+        def _prefill(p, b, caches):
+            """Encode the (stub-frontend) source and prefill the decoder."""
+            enc_out = lm.encode(cfg, p, b["frames"])
+            pad = caches["enc_out"].shape[1] - enc_out.shape[1]
+            enc_buf = jnp.pad(enc_out, ((0, 0), (0, pad), (0, 0))).astype(
+                caches["enc_out"].dtype
+            )
+            logits, new_layers = lm.decode_stack(
+                cfg,
+                p,
+                b["tokens"],
+                enc_out,
+                {"layers": caches["layers"]},
+                head_mode="last",
+            )
+            return logits, {
+                **caches,
+                "enc_out": enc_buf,
+                "enc_len": jnp.int32(enc_out.shape[1]),
+                "layers": new_layers["layers"],
+            }
+
+        return Model(
+            cfg=cfg,
+            abstract_params=lambda: lm.encdec_abstract(cfg),
+            loss=lambda p, b: lm.encdec_loss(cfg, p, b),
+            forward=lambda p, b: lm.decode_stack(
+                cfg, p, b["tokens"], lm.encode(cfg, p, b["frames"])
+            )[0],
+            decode_step=_decode_step,
+            cache_abstract=_cache_abstract,
+            prefill=_prefill,
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            abstract_params=lambda: hybrid.xlstm_abstract(cfg),
+            loss=lambda p, b: _generic_loss(cfg, hybrid.xlstm_forward, p, b),
+            forward=lambda p, b: hybrid.xlstm_forward(cfg, p, b)[0],
+            decode_step=lambda p, tok, caches, pos: hybrid.xlstm_forward(
+                cfg, p, {"tokens": tok}, caches=caches, positions=pos
+            )[:2],
+            cache_abstract=lambda batch, max_len: hybrid.xlstm_cache_abstract(
+                cfg, batch, max_len
+            ),
+            prefill=lambda p, b, caches: hybrid.xlstm_forward(
+                cfg, p, b, caches=caches, head_mode="last", prefill=True
+            )[:2],
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            abstract_params=lambda: hybrid.zamba_abstract(cfg),
+            loss=lambda p, b: _generic_loss(cfg, hybrid.zamba_forward, p, b),
+            forward=lambda p, b: hybrid.zamba_forward(cfg, p, b)[0],
+            decode_step=lambda p, tok, caches, pos: hybrid.zamba_forward(
+                cfg, p, {"tokens": tok}, caches=caches, positions=pos
+            )[:2],
+            cache_abstract=lambda batch, max_len: hybrid.zamba_cache_abstract(
+                cfg, batch, max_len
+            ),
+            prefill=lambda p, b, caches: hybrid.zamba_forward(
+                cfg, p, b, caches=caches, head_mode="last", prefill=True
+            )[:2],
+        )
+    raise KeyError(f"unknown family {fam}")
+
+
+def _generic_loss(cfg, fwd, params, batch):
+    from .common import chunked_softmax_xent
+    from .lm import _head
+
+    hidden, _, aux = fwd(cfg, params, batch, head_mode="none")
+    loss = chunked_softmax_xent(
+        hidden, _head(cfg, params), batch["labels"], logit_scale=cfg.logit_scale,
+        n_vocab=cfg.vocab_size,
+    )
+    return loss + aux, {"xent": loss, "aux": aux}

@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) blocks: chunked training scan + O(1) decode updates.
+
+The selective state space recurrence per head (state N, head dim P):
+
+    S_t = exp(A dt_t) S_{t-1} + dt_t x_t B_t^T      S in R^{P x N}
+    y_t = S_t C_t + D x_t
+
+Training uses the chunked dual form: within-chunk terms are an
+attention-like matmul against the decay-products matrix, cross-chunk
+state is carried by ``lax.scan`` — sub-quadratic in sequence length and
+TPU-friendly (all chunk math is MXU matmuls).  Decode is a single
+recurrence step on a cached state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamInfo
+
+
+def mamba_params(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "w_in": ParamInfo((d, 2 * d_in + 2 * s.d_state + h), ("embed", "heads")),
+        "conv_w": ParamInfo((s.d_conv, conv_dim), (None, "heads")),
+        "conv_b": ParamInfo((conv_dim,), ("heads",), init="zeros"),
+        "a_log": ParamInfo((h,), ("heads",), init="zeros"),
+        "d_skip": ParamInfo((h,), ("heads",), init="ones"),
+        "dt_bias": ParamInfo((h,), ("heads",), init="zeros"),
+        "norm_w": ParamInfo((d_in,), ("heads",), init="ones"),
+        "w_out": ParamInfo((d_in, d), ("heads", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, d_in, h
+
+
+def _conv_step(conv_state, xbc, w, b):
+    """Causal depthwise conv for one step. conv_state: [B, K-1, C]."""
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def mamba_scan(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig, return_state: bool = False
+):
+    """Full-sequence (training/prefill) pass.  x: [B, T, d]."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    b, t, _ = x.shape
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc, dtr, d_in, h = _split_proj(cfg, proj)
+
+    # causal depthwise conv over time
+    k = s.d_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_tail = pad[:, t:, :]  # last k-1 raw inputs -> decode conv state
+    windows = jnp.stack([pad[:, i : i + t, :] for i in range(k)], axis=2)  # [B,T,K,C]
+    xbc = jax.nn.silu(jnp.einsum("btkc,kc->btc", windows, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_))
+
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    xs = xs.reshape(b, t, h, s.head_dim)
+    dt_act = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,T,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    adt = a[None, None, :] * dt_act  # [B,T,H] (negative)
+
+    q = min(s.chunk, t)
+    while t % q:
+        q -= 1
+    nchunk = t // q
+    # reshape to chunks
+    xs_c = xs.reshape(b, nchunk, q, h, s.head_dim)
+    b_c = bmat.reshape(b, nchunk, q, s.d_state)
+    c_c = cmat.reshape(b, nchunk, q, s.d_state)
+    adt_c = adt.reshape(b, nchunk, q, h)
+    dt_c = dt_act.reshape(b, nchunk, q, h)
+
+    def chunk_step(state, inp):
+        # state: [B, H, P, N]
+        xs_k, b_k, c_k, adt_k, dt_k = inp  # [B,q,...]
+        cum = jnp.cumsum(adt_k, axis=1)  # [B,q,H]
+        # inter-chunk: y_inter[q] = C_q . S_prev^T . exp(cum_q)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", c_k, state.astype(jnp.float32)) * jnp.exp(cum)[..., None]
+        # decay matrix L[q, s] = exp(cum_q - cum_s) for s <= q
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # [B,q,s,H]
+        tri = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+        l_mat = jnp.where(tri, jnp.exp(diff), 0.0)  # [B,q,s,H]
+        cb = jnp.einsum("bqn,bsn->bqs", c_k, b_k)[..., None]  # [B,q,s,1]
+        w = cb * l_mat * dt_k[:, None, :, :]  # [B,q,s,H]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w.astype(dt_), xs_k)
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)  # [B,q,H]
+        contrib = jnp.einsum(
+            "bqh,bqhp,bqn->bhpn", (decay_end * dt_k).astype(dt_), xs_k, b_k
+        )
+        new_state = state * jnp.exp(cum[:, -1, :]).astype(dt_)[:, :, None, None] + contrib
+        return new_state, (y_inter.astype(dt_) + y_intra)
+
+    state0 = jnp.zeros((b, h, s.head_dim, s.d_state), dt_)
+    inputs = tuple(
+        jnp.moveaxis(v, 1, 0) for v in (xs_c, b_c, c_c, adt_c, dt_c)
+    )
+    final_state, ys = jax.lax.scan(chunk_step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, s.head_dim)
+    y = y + p["d_skip"].astype(dt_)[None, None, :, None] * xs
+    y = y.reshape(b, t, d_in)
+    # gated RMS norm then output projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dt_) * p["norm_w"].astype(dt_)
+    out = y @ p["w_out"].astype(dt_)
+    if return_state:
+        return out, {"state": final_state, "conv": conv_tail}
+    return out
+
+
+def mamba_decode_step(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # [B, 1, d]
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    s = cfg.ssm
+    dt_ = x.dtype
+    b = x.shape[0]
+    proj = x[:, 0] @ p["w_in"].astype(dt_)
+    z, xbc, dtr, d_in, h = _split_proj(cfg, proj)
+    xbc, conv_state = _conv_step(cache["conv"], xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xs, bvec, cvec = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    xs = xs.reshape(b, h, s.head_dim)
+    dt_act = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(a[None] * dt_act).astype(dt_)  # [B,H]
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_act.astype(dt_), xs, bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec) + p["d_skip"].astype(dt_)[None, :, None] * xs
+    y = y.reshape(b, d_in) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dt_) * p["norm_w"].astype(dt_)
+    out = (y @ p["w_out"].astype(dt_))[:, None, :]
+    return out, {"state": state, "conv": conv_state}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, s.head_dim, s.d_state), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), dtype),
+    }

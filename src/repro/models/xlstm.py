@@ -1,0 +1,239 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, sequential scan), following arXiv:2405.04517.
+
+mLSTM per head (dim P): matrix memory C in R^{P x P}, normalizer n:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t^T q_t|, 1)
+
+with exponentially-gated i/f stabilized by a running max m_t.  Training
+uses a chunked form (decay products inside the chunk, scan across
+chunks) — the same dual-form pattern as the SSD kernel.  sLSTM keeps
+per-unit scalar state and is inherently sequential: a ``lax.scan`` over
+time with a cheap body.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamInfo, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    d_in = int(cfg.xlstm.proj_factor * d)
+    p = d_in // h
+    return d, h, d_in, p
+
+
+def mlstm_params(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    d, h, d_in, _ = _dims(cfg)
+    return {
+        "w_up": ParamInfo((d, 2 * d_in), ("embed", "heads")),
+        "w_q": ParamInfo((d_in, d_in), (None, "heads")),
+        "w_k": ParamInfo((d_in, d_in), (None, "heads")),
+        "w_v": ParamInfo((d_in, d_in), (None, "heads")),
+        "w_if": ParamInfo((d_in, 2 * h), ("heads", None), init="small"),
+        "b_if": ParamInfo((2 * h,), (None,), init="zeros"),
+        "norm_w": ParamInfo((d_in,), ("heads",), init="ones"),
+        "w_down": ParamInfo((d_in, d), ("heads", "embed")),
+    }
+
+
+def _mlstm_gates(p, xv, h):
+    gf = xv @ p["w_if"].astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    logi, logf = gf[..., :h], gf[..., h:]
+    # log f via log-sigmoid (forget in (0,1)), i exponential
+    logf = jax.nn.log_sigmoid(logf)
+    return logi, logf
+
+
+def mlstm_scan(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig, return_state: bool = False
+):
+    """Chunked-parallel mLSTM over a full sequence. x: [B, T, d]."""
+    d, h, d_in, hd = _dims(cfg)
+    dt_ = x.dtype
+    b, t, _ = x.shape
+    up = x @ p["w_up"].astype(dt_)
+    xv, gate = up[..., :d_in], up[..., d_in:]
+    q = (xv @ p["w_q"].astype(dt_)).reshape(b, t, h, hd)
+    k = (xv @ p["w_k"].astype(dt_)).reshape(b, t, h, hd) / jnp.sqrt(hd).astype(dt_)
+    v = (xv @ p["w_v"].astype(dt_)).reshape(b, t, h, hd)
+    logi, logf = _mlstm_gates(p, xv.astype(jnp.float32), h)  # [B,T,H]
+
+    qc = cfg.ssm.chunk if cfg.ssm else 64
+    qn = min(qc, t)
+    while t % qn:
+        qn //= 2
+    nchunk = t // qn
+    qs = q.reshape(b, nchunk, qn, h, hd)
+    ks = k.reshape(b, nchunk, qn, h, hd)
+    vs = v.reshape(b, nchunk, qn, h, hd)
+    li = logi.reshape(b, nchunk, qn, h)
+    lf = logf.reshape(b, nchunk, qn, h)
+
+    def chunk(carry, inp):
+        c_state, n_state, m_state = carry  # [B,H,P,P], [B,H,P], [B,H]
+        qk, kk, vk, lik, lfk = inp
+        cumf = jnp.cumsum(lfk, axis=1)  # [B,q,H]
+        # stabilizer: m = max(running max of (cumf + li - step contributions))
+        # within-chunk log weights: w[q_, s] = cumf_q - cumf_s + li_s  (s <= q_)
+        logw = cumf[:, :, None, :] - cumf[:, None, :, :] + lik[:, None, :, :]
+        tri = (jnp.arange(qn)[:, None] >= jnp.arange(qn)[None, :])[None, :, :, None]
+        logw = jnp.where(tri, logw, -jnp.inf)
+        # inter-chunk log weight for the carried state: cumf_q + m_state
+        log_inter = cumf + m_state[:, None, :]  # [B,q,H]
+        m_new = jnp.maximum(jnp.max(jnp.where(tri, logw, -jnp.inf), axis=2), log_inter)
+        w = jnp.exp(logw - m_new[:, :, None, :])  # [B,q,s,H]
+        scores = jnp.einsum("bqhp,bshp->bqsh", qk, kk).astype(jnp.float32)
+        intra = jnp.einsum("bqsh,bshp->bqhp", w * scores, vk.astype(jnp.float32))
+        inter_scale = jnp.exp(log_inter - m_new)  # [B,q,H]
+        inter = jnp.einsum("bqhp,bhvp->bqhv", qk.astype(jnp.float32), c_state) * inter_scale[..., None]
+        norm_intra = jnp.einsum("bqsh,bshp->bqhp", w, kk.astype(jnp.float32))
+        denom = jnp.einsum("bqhp,bqhp->bqh", qk.astype(jnp.float32), norm_intra) + \
+            jnp.einsum("bqhp,bhp->bqh", qk.astype(jnp.float32), n_state) * inter_scale
+        # scale-invariant stabiliser: max(|n^T q|, 1) in unscaled units is
+        # max(|denom|, exp(-m)) on the m-scaled carried quantities.
+        hvec = (intra + inter) / jnp.maximum(jnp.abs(denom), jnp.exp(-m_new))[..., None]
+        # carry update (decay to end of chunk, renormalized to m_new_end)
+        m_end = m_new[:, -1, :]
+        decay_end = jnp.exp(cumf[:, -1:, :] - cumf + lik - m_end[:, None, :])  # [B,q,H]
+        c_contrib = jnp.einsum(
+            "bqh,bqhv,bqhp->bhvp", decay_end, vk.astype(jnp.float32), kk.astype(jnp.float32)
+        )
+        carry_scale = jnp.exp(cumf[:, -1, :] + m_state - m_end)
+        c_new = c_state * carry_scale[:, :, None, None] + c_contrib
+        n_new = n_state * carry_scale[:, :, None] + jnp.einsum(
+            "bqh,bqhp->bhp", decay_end, kk.astype(jnp.float32)
+        )
+        return (c_new, n_new, m_end), hvec
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (qs, ks, vs, li, lf))
+    (cf, nf, mf), hs = jax.lax.scan(chunk, (c0, n0, m0), inputs)
+    hvec = jnp.moveaxis(hs, 0, 1).reshape(b, t, d_in).astype(dt_)
+    hvec = rms_norm(hvec, p["norm_w"], 1e-5) * jax.nn.silu(gate)
+    out = hvec @ p["w_down"].astype(dt_)
+    if return_state:
+        return out, {"c": cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_decode_step(p, x, cache, cfg: ModelConfig):
+    d, h, d_in, hd = _dims(cfg)
+    dt_ = x.dtype
+    b = x.shape[0]
+    up = x[:, 0] @ p["w_up"].astype(dt_)
+    xv, gate = up[..., :d_in], up[..., d_in:]
+    q = (xv @ p["w_q"].astype(dt_)).reshape(b, h, hd).astype(jnp.float32)
+    k = ((xv @ p["w_k"].astype(dt_)) / jnp.sqrt(hd).astype(dt_)).reshape(b, h, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"].astype(dt_)).reshape(b, h, hd).astype(jnp.float32)
+    logi, logf = _mlstm_gates(p, xv.astype(jnp.float32), h)  # [B,H]
+    c, n, m = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    fdec = jnp.exp(logf + m - m_new)
+    iexp = jnp.exp(logi - m_new)
+    c = c * fdec[:, :, None, None] + iexp[:, :, None, None] * jnp.einsum("bhv,bhp->bhvp", v, k)
+    n = n * fdec[:, :, None] + iexp[:, :, None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)), jnp.exp(-m_new))
+    hvec = jnp.einsum("bhp,bhvp->bhv", q, c) / denom[:, :, None]
+    hvec = hvec.reshape(b, d_in).astype(dt_)
+    hvec = rms_norm(hvec, p["norm_w"], 1e-5) * jax.nn.silu(gate)
+    out = (hvec @ p["w_down"].astype(dt_))[:, None, :]
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    _, h, d_in, hd = _dims(cfg)
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+def slstm_params(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    d, h, d_in, _ = _dims(cfg)
+    return {
+        "w_up": ParamInfo((d, 2 * d_in), ("embed", "heads")),
+        "w_gates": ParamInfo((d_in, 4 * d_in), (None, "heads")),
+        "r_gates": ParamInfo((d_in, 4 * d_in), (None, "heads"), init="small"),
+        "b_gates": ParamInfo((4 * d_in,), ("heads",), init="zeros"),
+        "norm_w": ParamInfo((d_in,), ("heads",), init="ones"),
+        "w_down": ParamInfo((d_in, d), ("heads", "embed")),
+    }
+
+
+def _slstm_cell(p, xt, state):
+    """One sLSTM step.  xt: [B, d_in] f32; state: (c, n, hprev, m)."""
+    c, n, hprev, m = state
+    gates = xt @ p["w_gates"].astype(jnp.float32) + hprev @ p["r_gates"].astype(
+        jnp.float32
+    ) + p["b_gates"].astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, ii)
+    fdec = jnp.exp(logf + m - m_new)
+    iexp = jnp.exp(ii - m_new)
+    c_new = fdec * c + iexp * zt
+    n_new = fdec * n + iexp
+    h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_scan(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig, return_state: bool = False
+):
+    d, h, d_in, hd = _dims(cfg)
+    dt_ = x.dtype
+    b, t, _ = x.shape
+    up = x @ p["w_up"].astype(dt_)
+    xv, gate = up[..., :d_in].astype(jnp.float32), up[..., d_in:]
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state)
+        return new, new[2]
+
+    z = jnp.zeros((b, d_in), jnp.float32)
+    state0 = (z, z, z, jnp.full((b, d_in), -1e30, jnp.float32))
+    (cf, nf, hf, mf), hs = jax.lax.scan(step, state0, jnp.moveaxis(xv, 1, 0))
+    hvec = jnp.moveaxis(hs, 0, 1).astype(dt_)
+    hvec = rms_norm(hvec, p["norm_w"], 1e-5) * jax.nn.silu(gate)
+    out = hvec @ p["w_down"].astype(dt_)
+    if return_state:
+        return out, {"c": cf, "n": nf, "h": hf, "m": mf}
+    return out
+
+
+def slstm_decode_step(p, x, cache, cfg: ModelConfig):
+    d, h, d_in, hd = _dims(cfg)
+    dt_ = x.dtype
+    b = x.shape[0]
+    up = x[:, 0] @ p["w_up"].astype(dt_)
+    xv, gate = up[..., :d_in].astype(jnp.float32), up[..., d_in:]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, hnew, m = _slstm_cell(p, xv, state)
+    hvec = hnew.astype(dt_)
+    hvec = rms_norm(hvec, p["norm_w"], 1e-5) * jax.nn.silu(gate)
+    out = (hvec @ p["w_down"].astype(dt_))[:, None, :]
+    return out, {"c": c, "n": n, "h": hnew, "m": m}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    _, _, d_in, _ = _dims(cfg)
+    f = lambda: jax.ShapeDtypeStruct((batch, d_in), jnp.float32)
+    return {"c": f(), "n": f(), "h": f(), "m": f()}

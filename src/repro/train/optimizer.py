@@ -1,0 +1,119 @@
+"""Optimizers and LR schedules (pure-JAX, no external deps).
+
+AdamW with decoupled weight decay, global-norm clipping, and the
+schedules the assigned recipes call for: cosine (default) and WSD
+(warmup-stable-decay, the MiniCPM schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # leaves whose path matches any of these substrings skip weight decay
+    no_decay: tuple = ("norm", "bias", "b_", "ln_", "a_log", "dt_bias", "d_skip")
+
+
+def _decay_mask(params, no_decay) -> Any:
+    def leaf(path, x):
+        joined = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        ).lower()
+        return not any(s in joined for s in no_decay)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr(step)
+    mask = _decay_mask(params, cfg.no_decay)
+
+    def upd(p, m, v, decay):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if decay else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + wd)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu, mask)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), metrics
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int, floor: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long flat stage,
+    short exponential-ish decay to ``floor * peak``."""
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        in_decay = step - (warmup + stable)
+        frac = jnp.clip(in_decay / max(decay, 1), 0.0, 1.0)
+        dec = peak * jnp.exp(jnp.log(floor) * frac)
+        out = jnp.where(step < warmup, warm, peak)
+        return jnp.where(in_decay > 0, dec, out)
+
+    return lr
+
+
+def get_schedule(name: str, peak: float, total: int, warmup: Optional[int] = None):
+    warmup = warmup if warmup is not None else max(total // 50, 10)
+    if name == "cosine":
+        return cosine_schedule(peak, warmup, total)
+    if name == "wsd":
+        decay = max(total // 10, 10)
+        return wsd_schedule(peak, warmup, total - warmup - decay, decay)
+    raise KeyError(name)

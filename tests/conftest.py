@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run manages its own device
+# count in a separate process); guard against leaked XLA_FLAGS.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

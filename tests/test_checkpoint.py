@@ -1,0 +1,117 @@
+"""Checkpoint manager: atomicity, GC, resume, topology-agnostic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(step):
+    return {
+        "params": {"w": jnp.full((4, 4), float(step)), "b": jnp.arange(3.0)},
+        "opt": {"mu": {"w": jnp.zeros((4, 4)), "b": jnp.zeros(3)}},
+        "step": jnp.int32(step),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(5, _state(5), meta={"config": "tiny"})
+    step, state = mgr.restore(_state(0))
+    assert step == 5
+    assert float(state["params"]["w"][0, 0]) == 5.0
+    assert int(state["step"]) == 5
+
+
+def test_keep_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_atomic_tmp_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1))
+    # simulate a crash mid-write: stray tmp dir must not be listed
+    os.makedirs(tmp_path / "tmp.99")
+    assert mgr.all_steps() == [1]
+    step, _ = mgr.restore(_state(0))
+    assert step == 1
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    step, state = mgr.restore(_state(0), step=2)
+    assert step == 2 and float(state["params"]["w"][0, 0]) == 2.0
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1))
+    bad = _state(0)
+    bad["params"]["w"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state(0))
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+    rc = dataclasses.replace(
+        reduced(get_config("minicpm-2b")), num_layers=2, vocab_size=64, d_model=32,
+        num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,
+    )
+    model = build_model(rc)
+    opt_cfg = AdamWConfig(lr=cosine_schedule(1e-3, 2, 100))
+    data = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=4))
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        p2, o2, _ = adamw_update(grads, opt, params, opt_cfg)
+        return p2, o2, loss
+
+    # straight run
+    p = model.init(jax.random.PRNGKey(0))
+    o = adamw_init(p, opt_cfg)
+    for i in range(6):
+        p, o, _ = step(p, o, data.batch(i))
+    straight = p
+
+    # interrupted run
+    p = model.init(jax.random.PRNGKey(0))
+    o = adamw_init(p, opt_cfg)
+    mgr = CheckpointManager(str(tmp_path))
+    for i in range(3):
+        p, o, _ = step(p, o, data.batch(i))
+    mgr.save(3, {"params": p, "opt": o._asdict()})
+    _, restored = mgr.restore({"params": p, "opt": o._asdict()})
+    p = restored["params"]
+    from repro.train.optimizer import AdamWState
+
+    o = AdamWState(**restored["opt"])
+    for i in range(3, 6):
+        p, o, _ = step(p, o, data.batch(i))  # data resumes by step index
+    diff = max(
+        float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(p))
+    )
+    assert diff < 1e-6

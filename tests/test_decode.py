@@ -1,0 +1,100 @@
+"""Serving correctness: KV-cache decode equals full recompute, and
+prefill -> decode continuation matches the teacher-forced forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.models import build_model
+from repro.models import lm
+
+REL_TOL = {"xlstm-1.3b": 0.05, "zamba2-2.7b": 0.08}  # bf16 chunked-vs-step recurrences
+
+
+def _run_decode(model, rc, params, toks, cache, start, end):
+    step = jax.jit(model.decode_step)
+    outs = []
+    b = toks.shape[0]
+    for i in range(start, end):
+        logits, cache = step(params, toks[:, i : i + 1], cache, np.full((b, 1), i, np.int32))
+        outs.append(np.asarray(logits, np.float32)[:, 0])
+    return np.stack(outs, 1), cache
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch):
+    rc = reduced(get_config(arch))
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t = 2, 8
+    toks = np.random.default_rng(0).integers(0, rc.vocab_size, (b, t)).astype(np.int32)
+    cache = model.init_cache(b, 16)
+    if rc.family == "encdec":
+        frames = np.random.default_rng(1).normal(size=(b, 12, rc.d_model)).astype(np.float32)
+        enc_out = jax.jit(lambda p, f: lm.encode(rc, p, f))(params, frames)
+        full = np.asarray(
+            jax.jit(lambda p, tk: lm.decode_stack(rc, p, tk, enc_out)[0])(params, toks),
+            np.float32,
+        )
+        cache["enc_out"] = jnp.pad(enc_out, ((0, 0), (0, 4), (0, 0))).astype(jnp.bfloat16)
+        cache["enc_len"] = jnp.int32(12)
+    else:
+        full = np.asarray(jax.jit(model.forward)(params, {"tokens": toks}), np.float32)
+    dec, _ = _run_decode(model, rc, params, toks, cache, 0, t)
+    rel = np.abs(dec - full).max() / (np.abs(full).max() + 1e-9)
+    assert rel <= REL_TOL.get(arch, 1e-3), (arch, rel)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_then_decode(arch):
+    rc = reduced(get_config(arch))
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t, extra = 2, 8, 3
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, rc.vocab_size, (b, t + extra)).astype(np.int32)
+    cache = model.init_cache(b, 16)
+    if rc.family == "encdec":
+        frames = rng.normal(size=(b, t, rc.d_model)).astype(np.float32)
+        pre_batch = {"frames": frames, "tokens": toks[:, :t]}
+        full = np.asarray(
+            jax.jit(
+                lambda p, tk: lm.decode_stack(rc, p, tk, lm.encode(rc, p, frames))[0]
+            )(params, toks),
+            np.float32,
+        )
+    else:
+        pre_batch = {"tokens": toks[:, :t]}
+        full = np.asarray(jax.jit(model.forward)(params, {"tokens": toks}), np.float32)
+    last, cache = jax.jit(model.prefill)(params, pre_batch, cache)
+    errs = [np.abs(np.asarray(last, np.float32)[:, 0] - full[:, t - 1]).max()]
+    dec, _ = _run_decode(model, rc, params, toks, cache, t, t + extra)
+    errs.append(np.abs(dec - full[:, t : t + extra]).max())
+    rel = max(errs) / (np.abs(full).max() + 1e-9)
+    assert rel <= REL_TOL.get(arch, 1e-3), (arch, rel)
+
+
+def test_chunked_attention_matches_naive():
+    """The flash-chunked primitive agrees with the naive softmax."""
+    import dataclasses
+
+    from repro.models.attention import gqa_attention, gqa_params
+    from repro.models.common import materialize
+
+    rc = dataclasses.replace(reduced(get_config("yi-34b")), compute_dtype="float32")
+    p = materialize(gqa_params(rc), jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 24, rc.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    for causal in (True, False):
+        a = gqa_attention(p, x, pos, rc, causal=causal, impl="chunked")[0]
+        b = gqa_attention(p, x, pos, rc, causal=causal, impl="naive")[0]
+        assert np.abs(np.asarray(a - b)).max() < 2e-4
+
+
+def test_long_context_flag():
+    from repro.configs import SHAPES, shape_applicable
+
+    long = SHAPES["long_500k"]
+    runs = [a for a in ARCH_NAMES if shape_applicable(get_config(a), long)]
+    assert sorted(runs) == ["xlstm-1.3b", "zamba2-2.7b"]

@@ -1,0 +1,95 @@
+"""The loop-aware HLO cost walker: exact on loop-free programs, correct
+trip-count multiplication for scans, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_loop_free_matches_xla():
+    def plain(x, w):
+        return jnp.tanh(x @ w) @ w
+
+    c = _compile(
+        plain,
+        jax.ShapeDtypeStruct((256, 512), jnp.float32),
+        jax.ShapeDtypeStruct((512, 512), jnp.float32),
+    )
+    got = analyze(c.as_text())
+    assert got.flops == pytest.approx(c.cost_analysis()["flops"], rel=1e-6)
+
+
+def test_scan_multiplied_by_trip_count():
+    def scanned(x, w):
+        def body(cst, _):
+            return jnp.tanh(cst @ w), None
+
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    c = _compile(
+        scanned,
+        jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        jax.ShapeDtypeStruct((512, 512), jnp.float32),
+    )
+    got = analyze(c.as_text())
+    assert got.flops == pytest.approx(10 * 2 * 512**3, rel=1e-6)
+    # XLA itself undercounts (body once) — that's why the walker exists
+    assert c.cost_analysis()["flops"] == pytest.approx(2 * 512**3, rel=1e-6)
+
+
+def test_nested_scan():
+    def nested(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    c = _compile(
+        nested,
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+    )
+    got = analyze(c.as_text())
+    assert got.flops == pytest.approx(12 * 2 * 128**3, rel=1e-6)
+
+
+def test_bytes_positive_and_dominated_by_big_ops():
+    def f(x):
+        return (x @ x).sum()
+
+    c = _compile(f, jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    got = analyze(c.as_text())
+    assert got.bytes >= 3 * 512 * 512 * 4  # two reads + one write at least
+
+
+def test_parser_on_real_model():
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+
+    rc = dataclasses.replace(reduced(get_config("minicpm-2b")), num_layers=3)
+    model = build_model(rc)
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))),
+    )
+    toks = jax.ShapeDtypeStruct((2, 16), jnp.int32)
+    c = jax.jit(lambda p, t: model.loss(p, {"tokens": t, "labels": t})).lower(params, toks).compile()
+    got = analyze(c.as_text())
+    # 3 layers x (attn + mlp) forward: at least 6*N*D-ish flops present
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    assert got.flops > 2 * n_params * 2 * 16  # > fwd matmul floor
+    assert got.bytes > 0

@@ -1,0 +1,92 @@
+"""Power-set combinatorics: coded supports, conditions C1-C6,
+decodability invariants of Theorem 6 (property-tested)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constructions as C
+from repro.core.powers import (
+    age_coded,
+    coded_garbage_disjoint,
+    diffset,
+    entangled_coded,
+    greedy_powers,
+    h_support,
+    important_powers_distinct,
+    polydot_coded,
+    secret_conditions_hold,
+    sumset,
+)
+
+
+def test_sumset_basic():
+    assert list(sumset([0, 1], [0, 2])) == [0, 1, 2, 3]
+    assert list(diffset([5, 7], [1, 10])) == [4, 6]
+
+
+def test_greedy_powers():
+    assert greedy_powers(3, np.array([0, 1, 3])) == [2, 4, 5]
+
+
+def test_polydot_supports_match_paper():
+    c = polydot_coded(2, 2)
+    # eq. (7): {0..ts-1}; eq. (8) with theta' = t(2s-1) = 6
+    assert sorted(c.pa) == [0, 1, 2, 3]
+    assert sorted(c.pb) == [0, 2, 6, 8]
+
+
+def test_age_example1_supports():
+    c = age_coded(2, 2, 2)
+    assert sorted(c.pa) == [0, 1, 2, 3]
+    assert sorted(c.pb) == [0, 1, 6, 7]
+    assert sorted(c.imp) == [1, 3, 7, 9]
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 6), t=st.integers(1, 6), lam=st.integers(0, 8))
+def test_age_decodable(s, t, lam):
+    """Theorem 6: important powers distinct and garbage-free."""
+    c = age_coded(s, t, lam)
+    assert important_powers_distinct(c)
+    assert coded_garbage_disjoint(c)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(1, 6), t=st.integers(1, 6))
+def test_polydot_decodable(s, t):
+    c = polydot_coded(s, t)
+    assert important_powers_distinct(c)
+    assert coded_garbage_disjoint(c)
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 5), t=st.integers(1, 5), z=st.integers(1, 10))
+def test_polydot_cmpc_conditions(s, t, z):
+    """Algorithm 1 output satisfies C1-C3 (eq. 9)."""
+    if s == 1 and t == 1:
+        return
+    sch = C.polydot_cmpc(s, t, z)
+    assert secret_conditions_hold(sch.coded, list(sch.sa), list(sch.sb))
+    assert len(sch.sa) == z and len(sch.sb) == z
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    s=st.integers(1, 5), t=st.integers(1, 5), z=st.integers(1, 10),
+    data=st.data(),
+)
+def test_age_cmpc_conditions(s, t, z, data):
+    """Algorithm 2 output satisfies C4-C6 (eq. 27) for every lambda."""
+    lam = data.draw(st.integers(0, z))
+    sch = C.age_cmpc_fixed(s, t, z, lam)
+    assert secret_conditions_hold(sch.coded, list(sch.sa), list(sch.sb))
+
+
+def test_entangled_is_age_lambda0():
+    assert entangled_coded(3, 4).pa == age_coded(3, 4, 0).pa
+    assert entangled_coded(3, 4).pb == age_coded(3, 4, 0).pb
+
+
+def test_h_support_is_n_workers():
+    sch = C.age_cmpc(2, 2, 2)
+    assert len(h_support(sch.coded, list(sch.sa), list(sch.sb))) == sch.n_workers

@@ -1,0 +1,69 @@
+"""Privacy structure (Theorem 13 / Lemma 14 mechanics).
+
+Information-theoretic privacy against z colluders reduces to: the z
+secret coefficients act as a one-time pad on any z workers' shares,
+i.e. the z x z Vandermonde submatrix on the secret powers is invertible
+mod p.  We verify that algebraic condition for many worker subsets, and
+run a distribution smoke test (share histograms are uniform)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import constructions as C
+from repro.core import protocol as proto
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, make_plan
+
+
+@pytest.mark.parametrize("method,s,t,z", [("age", 2, 2, 2), ("polydot", 2, 2, 3), ("age", 3, 2, 4)])
+def test_secret_vandermonde_invertible(method, s, t, z):
+    field = Field()
+    sch = C.build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=s * 2, ma=t * 2, mb=t * 2, s=s, t=t)
+    plan = make_plan(sch, shapes, seed=3)
+    rng = np.random.default_rng(0)
+    for sa_or_sb in (sch.sa, sch.sb):
+        for _ in range(10):
+            subset = rng.choice(plan.n_total, size=z, replace=False)
+            v = field.vandermonde(plan.alphas[subset], sa_or_sb)
+            field.inv_matrix(v)  # raises if singular -> privacy broken
+
+
+def test_share_uniformity_smoke():
+    """Shares of two very different inputs should look identically
+    distributed to any single worker (chi-square-free coarse check)."""
+    field = Field()
+    sch = C.build_scheme("age", 2, 2, 1)
+    shapes = BlockShapes(k=64, ma=64, mb=64, s=2, t=2)
+    plan = make_plan(sch, shapes, seed=5)
+    rng = np.random.default_rng(1)
+    a0 = np.zeros((64, 64), np.int64)
+    a1 = field.random(rng, (64, 64))
+    buckets = 16
+    hists = []
+    for a in (a0, a1):
+        h = np.zeros(buckets)
+        for seed in range(8):
+            fa = np.asarray(proto.share_a(plan, a, np.random.default_rng(seed)))
+            h += np.histogram(fa[0].ravel(), bins=buckets, range=(0, field.p))[0]
+        hists.append(h / h.sum())
+    # both near-uniform and near each other
+    assert np.abs(hists[0] - 1 / buckets).max() < 0.01
+    assert np.abs(hists[0] - hists[1]).max() < 0.01
+
+
+def test_no_secret_leak_without_noise():
+    """Sanity counterexample: with z random terms removed, a worker's
+    share is a deterministic function of the data (i.e. the random
+    terms are what provides privacy)."""
+    field = Field()
+    sch = C.build_scheme("age", 2, 2, 1)
+    shapes = BlockShapes(k=4, ma=4, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, seed=6)
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(2)
+    a = field.random(np.random.default_rng(0), (4, 4))
+    fa1 = np.asarray(proto.share_a(plan, a, rng1))
+    fa2 = np.asarray(proto.share_a(plan, a, rng2))
+    # different blinding -> different shares (randomness is live)
+    assert not np.array_equal(fa1, fa2)

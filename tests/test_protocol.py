@@ -1,0 +1,123 @@
+"""End-to-end CMPC protocol: exact Y = A^T B over GF(p), straggler
+tolerance, coded-only decode, quantised real-valued layers, CRT mode."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import constructions as C
+from repro.core import protocol as proto
+from repro.core.gf import Field
+from repro.core.layers import PrivateLinear, secure_matmul, secure_matmul_crt
+from repro.core.planner import BlockShapes, make_plan
+
+
+@pytest.fixture(scope="module")
+def field():
+    return Field()
+
+
+CASES = [
+    ("age", 2, 2, 2),
+    ("age", 3, 2, 4),
+    ("age", 1, 3, 2),
+    ("age", 2, 1, 3),
+    ("polydot", 2, 3, 3),
+    ("polydot", 4, 2, 5),
+    ("entangled-greedy", 2, 2, 2),
+]
+
+
+@pytest.mark.parametrize("method,s,t,z", CASES)
+def test_end_to_end(method, s, t, z, field):
+    rng = np.random.default_rng(42)
+    sch = C.build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=s * 4, ma=t * 6, mb=t * 2, s=s, t=t)
+    plan = make_plan(sch, shapes, seed=1)
+    a = field.random(rng, (shapes.k, shapes.ma))
+    b = field.random(rng, (shapes.k, shapes.mb))
+    y, trace = proto.run(plan, a, b, seed=3)
+    assert np.array_equal(y, field.matmul(a.T, b))
+    # Corollary 12 accounting
+    n = plan.n_workers
+    assert trace.phase2_worker_to_worker == n * (n - 1) * (shapes.ma // t) * (shapes.mb // t)
+
+
+def test_coded_only_decode(field):
+    rng = np.random.default_rng(7)
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    h = proto.worker_multiply(plan, fa, fb)
+    y = proto.reconstruct_coded_only(plan, h)
+    assert np.array_equal(y, field.matmul(a.T, b))
+
+
+def test_straggler_tolerance(field):
+    """Spare workers serve Phase 2; Phase 3 decodes from any t^2+z."""
+    rng = np.random.default_rng(8)
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, n_spare=4)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    want = field.matmul(a.T, b)
+    # drop workers 0 and 2 from phase 2; decode from a shifted subset
+    ids2 = np.array([i for i in range(plan.n_total) if i not in (0, 2)])[: plan.n_workers]
+    ids3 = np.arange(3, 3 + plan.decode_threshold)
+    y, _ = proto.run(plan, a, b, seed=4, phase2_ids=ids2, phase3_ids=ids3)
+    assert np.array_equal(y, want)
+
+
+def test_phase3_needs_threshold(field):
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=4, ma=4, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes)
+    with pytest.raises(ValueError):
+        plan.decode_matrix(np.arange(plan.decode_threshold - 1))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 3), t=st.integers(1, 3), z=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_protocol_property(s, t, z, seed):
+    if s == 1 and t == 1:
+        return
+    field = Field()
+    rng = np.random.default_rng(seed)
+    sch = C.build_scheme("age", s, t, z)
+    shapes = BlockShapes(k=s * 2, ma=t * 2, mb=t * 2, s=s, t=t)
+    plan = make_plan(sch, shapes, seed=seed)
+    a = field.random(rng, (shapes.k, shapes.ma))
+    b = field.random(rng, (shapes.k, shapes.mb))
+    y, _ = proto.run(plan, a, b, seed=seed + 1)
+    assert np.array_equal(y, field.matmul(a.T, b))
+
+
+def test_secure_matmul_real():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(16, 12))
+    b = rng.normal(size=(16, 8))
+    res = secure_matmul(a, b, s=2, t=2, z=2)
+    # fixed-point error bound: k * (a_max + b_max) / (2*scale)
+    assert np.abs(res.y - a.T @ b).max() < 1.0
+
+
+def test_secure_matmul_crt_precision():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(16, 12))
+    b = rng.normal(size=(16, 8))
+    res = secure_matmul_crt(a, b, s=2, t=2, z=2)
+    assert np.abs(res.y - a.T @ b).max() < 0.02
+
+
+def test_private_linear():
+    rng = np.random.default_rng(1)
+    lin = PrivateLinear(rng.normal(size=(32, 8)), s=2, t=2, z=1, blocks=2)
+    x = rng.normal(size=(6, 32))
+    assert np.abs(lin(x) - x @ lin.w).max() < 1.0

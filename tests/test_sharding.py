@@ -1,0 +1,110 @@
+"""Sharding rule unit tests (no multi-device needed: specs only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # spec-level tests only need mesh axis names/sizes
+    import subprocess, sys  # noqa: F401
+    from repro.launch.mesh import make_mesh
+
+    # 1 device: (1, 1) mesh with the production axis names
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_pspecs_basic(mesh):
+    from repro.distributed.sharding import param_pspecs
+
+    model = build_model(get_config("qwen2-72b"))
+    specs = param_pspecs(model.abstract_params(), mesh)
+    assert specs["embed"] == P("model", "data")
+    assert specs["final_norm"] == P()  # vectors replicated
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", "data")
+
+
+def test_param_pspecs_indivisible_replicates():
+    from repro.distributed.sharding import param_pspecs
+    from repro.launch.mesh import make_mesh
+    from repro.models.common import ParamInfo
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # vocab 122753 is not divisible by 16 -> but mesh is (1,1) so ok;
+    # simulate a 3-way axis via a fake info with indivisible dim
+    tree = {"w": ParamInfo((7, 64), ("vocab", "embed"))}
+    specs = param_pspecs(tree, mesh)
+    assert specs["w"] == P("model", "data") or specs["w"] == P(None, "data")
+
+
+def test_moe_experts_sharded(mesh):
+    import dataclasses
+
+    from repro.distributed.sharding import param_pspecs
+
+    cfg = get_config("dbrx-132b")
+    # optimized default: expert-TP (FFN hidden over model, experts local)
+    specs = param_pspecs(build_model(cfg).abstract_params(), mesh)
+    assert specs["layers"]["moe"]["w_gate"] == P(None, None, "data", "model")
+
+    # classic expert-parallel layout still available
+    ep = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, expert_tp=False, dispatch_groups=1)
+    )
+    specs_ep = param_pspecs(build_model(ep).abstract_params(), mesh)
+    assert specs_ep["layers"]["moe"]["w_gate"] == P(None, "model", "data", None)
+
+
+def test_cache_pspecs_decode_vs_long(mesh):
+    from repro.distributed.sharding import cache_pspecs
+
+    cfg = get_config("yi-34b")
+    model = build_model(cfg)
+    cache = model.cache_abstract(4, 64)
+    spec = cache_pspecs(cfg, cache, mesh, long_context=False)
+    assert spec["layers"]["k"] == P(None, "data", None, "model", None)
+    spec_long = cache_pspecs(cfg, cache, mesh, long_context=True)
+    assert spec_long["layers"]["k"] == P(None, None, "data", "model", None)
+    assert spec_long["layers"]["idx"] == P()
+
+
+def test_cache_pspecs_mla(mesh):
+    from repro.distributed.sharding import cache_pspecs
+
+    cfg = get_config("deepseek-v2-lite-16b")
+    model = build_model(cfg)
+    cache = model.cache_abstract(4, 64)
+    spec = cache_pspecs(cfg, cache, mesh)
+    assert spec["layers"]["c"] == P(None, "data", "model", None)
+
+
+def test_constrain_noop_without_rules():
+    from repro.distributed.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    assert constrain(x, ("batch", None)) is x
+
+
+def test_batch_spec_shapes():
+    from repro.configs import SHAPES
+
+    model = build_model(get_config("qwen2-72b"))
+    spec = model.batch_spec(SHAPES["train_4k"])
+    assert spec["tokens"].shape == (256, 4096)
+    assert spec["labels"].shape == (256, 4096)
+    dec = model.batch_spec(SHAPES["decode_32k"])
+    assert dec["tokens"].shape == (128, 1)
+
+    vlm = build_model(get_config("internvl2-26b"))
+    spec = vlm.batch_spec(SHAPES["train_4k"])
+    assert spec["patches"].shape[1] + spec["tokens"].shape[1] == 4096
+
+    enc = build_model(get_config("seamless-m4t-large-v2"))
+    spec = enc.batch_spec(SHAPES["prefill_32k"])
+    assert spec["frames"].shape == (32, 32768, 1024)

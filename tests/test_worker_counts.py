@@ -1,0 +1,146 @@
+"""Worker counts: paper's published numbers, closed forms vs exact
+constructions, and the dominance claims (Lemmas 3/9, Fig. 2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import closed_form as cf
+from repro.core import constructions as C
+
+
+# ----------------------------------------------------------------------
+# paper anchor points
+# ----------------------------------------------------------------------
+def test_example1_age():
+    """Section V-B Example 1: s = t = z = 2 -> lambda* = 2, N = 17."""
+    sch = C.age_cmpc(2, 2, 2)
+    assert sch.n_workers == 17
+    assert sch.lam == 2
+    n, lam = cf.n_age_exact(2, 2, 2)
+    assert (n, lam) == (17, 2)
+    assert cf.n_age(2, 2, 2) == 17
+
+
+def test_example1_entangled():
+    assert cf.n_entangled(2, 2, 2) == 19
+
+
+def test_example1_share_polynomials():
+    """F_A = C_A + S_A with the exact powers of Example 1."""
+    sch = C.age_cmpc_fixed(2, 2, 2, 2)
+    assert sch.fa_powers == [0, 1, 2, 3, 4, 5]
+    assert sch.fb_powers == [0, 1, 6, 7, 10, 11]
+    assert len(sch.h_powers) == 17  # x^0..x^16, all present
+
+
+def test_fig2_crossovers():
+    """Fig. 2 (s=4, t=15): SSMM second-best through z=48; PolyDot-CMPC
+    best baseline for 49 <= z <= 180; Entangled/GCSA from 181."""
+    s, t = 4, 15
+
+    def best_baseline(z):
+        vals = {
+            "polydot": C.polydot_cmpc(s, t, z).n_workers,
+            "ssmm": cf.n_ssmm(s, t, z),
+            "entangled": cf.n_entangled(s, t, z),
+            "gcsa": cf.n_gcsa_na(s, t, z),
+        }
+        return min(vals, key=vals.get), vals
+
+    for z in (10, 48):
+        name, vals = best_baseline(z)
+        assert name == "ssmm", (z, vals)
+    for z in (49, 100, 180):
+        name, vals = best_baseline(z)
+        assert name == "polydot", (z, vals)
+    for z in (181, 300):
+        name, vals = best_baseline(z)
+        assert name in ("entangled", "gcsa"), (z, vals)
+
+
+def test_fig2_age_always_best():
+    s, t = 4, 15
+    for z in range(1, 301, 7):
+        n, _ = cf.n_age_exact(s, t, z)
+        assert n <= C.polydot_cmpc(s, t, z).n_workers
+        assert n <= cf.n_ssmm(s, t, z)
+        assert n <= cf.n_entangled(s, t, z)
+        assert n <= cf.n_gcsa_na(s, t, z)
+
+
+def test_fig3_polydot_wins_cells():
+    """Fig. 3 (st=36, z=42): PolyDot-CMPC beats the other baselines at
+    (s,t) in {(2,18), (3,12), (4,9)}."""
+    z = 42
+    for s, t in [(2, 18), (3, 12), (4, 9)]:
+        n_pd = C.polydot_cmpc(s, t, z).n_workers
+        others = min(cf.n_entangled(s, t, z), cf.n_ssmm(s, t, z), cf.n_gcsa_na(s, t, z))
+        assert n_pd < others, (s, t, n_pd, others)
+
+
+# ----------------------------------------------------------------------
+# closed forms vs exact constructions
+# ----------------------------------------------------------------------
+@settings(max_examples=80, deadline=None)
+@given(s=st.integers(1, 6), t=st.integers(1, 6), z=st.integers(1, 16))
+def test_polydot_closed_form_upper_bounds_exact(s, t, z):
+    """Theorem 2 matches the exact |P(H)| except for gapped s=1 small-z
+    supports where the formula overcounts (exact is authoritative by
+    eq. (23)); the formula is never below the construction."""
+    if s == 1 and t == 1:
+        return
+    exact = C.polydot_cmpc(s, t, z).n_workers
+    formula = cf.n_polydot(s, t, z)
+    assert formula >= exact
+    if s != 1:
+        assert formula == exact, (s, t, z)
+
+
+@settings(max_examples=80, deadline=None)
+@given(s=st.integers(1, 6), t=st.integers(2, 6), z=st.integers(1, 12), data=st.data())
+def test_age_supports_fastpath_equals_greedy(s, t, z, data):
+    lam = data.draw(st.integers(0, z))
+    sch = C.age_cmpc_fixed(s, t, z, lam)
+    fa, fb = cf.age_supports(s, t, z, lam)
+    assert sorted(sch.fa_powers) == fa
+    assert sorted(sch.fb_powers) == fb
+    assert cf.n_age_exact_fixed(s, t, z, lam) == sch.n_workers
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 5), t=st.integers(2, 5), z=st.integers(1, 12), data=st.data())
+def test_age_gamma_transcription_upper_bounds_exact(s, t, z, data):
+    """Appendix F Gamma(lambda): validated == exact in most regions;
+    a few (Upsilon_5/7/9) transcribed cells overcount by O(1) — exact
+    set cardinality is authoritative, the formula never undercounts."""
+    lam = data.draw(st.integers(1, z))
+    exact = cf.n_age_exact_fixed(s, t, z, lam)
+    gamma = cf.age_gamma(s, t, z, lam)
+    assert gamma >= exact
+
+
+@settings(max_examples=60, deadline=None)
+@given(s=st.integers(1, 6), t=st.integers(1, 6), z=st.integers(1, 14))
+def test_lemma9_age_dominates(s, t, z):
+    """Lemma 9: N_AGE <= every baseline (exact construction)."""
+    n, _ = cf.n_age_exact(s, t, z)
+    assert n <= cf.n_entangled(s, t, z)
+    assert n <= cf.n_ssmm(s, t, z)
+    assert n <= cf.n_gcsa_na(s, t, z)
+    if not (s == 1 and t == 1):
+        assert n <= C.polydot_cmpc(s, t, z).n_workers
+
+
+def test_overhead_formulas():
+    """Corollaries 10-12 at the Fig. 4 operating point."""
+    m, s, t, z = 36_000, 4, 9, 42
+    n = cf.n_age(s, t, z)
+    comp = cf.computation_overhead(m, s, t, z, n)
+    stor = cf.storage_overhead(m, s, t, z, n)
+    comm = cf.communication_overhead(m, t, n)
+    assert comp == m**3 // (s * t * t) + m * m + n * (t * t + z - 1) * (m * m // (t * t))
+    assert stor == (2 * n + z + 1) * (m * m // (t * t)) + 2 * m * m // (s * t) + t * t
+    assert comm == n * (n - 1) * (m * m // (t * t))
+    # larger N strictly increases every overhead
+    assert cf.computation_overhead(m, s, t, z, n + 10) > comp
+    assert cf.storage_overhead(m, s, t, z, n + 10) > stor
+    assert cf.communication_overhead(m, t, n + 10) > comm
