@@ -1,0 +1,18 @@
+# Convenience targets; `pythonpath` in pyproject.toml makes the bare
+# checkout importable, so no PYTHONPATH=src hack is needed.
+
+PYTHON ?= python
+
+.PHONY: test test-fast bench quickstart
+
+test:
+	$(PYTHON) -m pytest -q
+
+test-fast:
+	$(PYTHON) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.run
+
+quickstart:
+	PYTHONPATH=src $(PYTHON) examples/quickstart.py

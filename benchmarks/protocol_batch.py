@@ -1,0 +1,72 @@
+"""Batched vs looped protocol execution: per-product wall time.
+
+The paper accounts computation overhead *per multiplication*; this
+benchmark measures how much of the Python/host overhead of ``run`` the
+batched device-resident engine (``run_batched``) amortizes away.  For
+each batch size it reports the per-product latency of
+
+* ``loop``    — a Python loop of per-sample ``protocol.run`` calls,
+* ``batched`` — one ``protocol.run_batched`` call over the whole batch,
+
+plus the resulting speedup.  The batched path shares one jitted
+computation and one plan's device constants across all products.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import constructions as C
+from repro.core import protocol as proto
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, get_plan
+
+from .common import timeit, write_csv
+
+BATCHES = (1, 8, 32)
+
+
+def run():
+    field = Field()
+    rng = np.random.default_rng(0)
+    m, s, t, z = 64, 2, 2, 2
+    sch = C.build_scheme("age", s, t, z)
+    shapes = BlockShapes(k=m, ma=m, mb=m, s=s, t=t)
+    plan = get_plan(sch, shapes)
+
+    rows = []
+    best = None
+    for batch in BATCHES:
+        a = field.random(rng, (batch, m, m))
+        b = field.random(rng, (batch, m, m))
+
+        def loop():
+            for i in range(batch):
+                proto.run(plan, a[i], b[i], seed=i)
+
+        def batched():
+            y, _ = proto.run_batched(plan, a, b, seed=0)
+            np.asarray(y)
+
+        loop_us = timeit(loop, repeat=3) / batch
+        batched_us = timeit(batched, repeat=3) / batch
+        speedup = loop_us / batched_us
+        rows.append(
+            {
+                "batch": batch,
+                "m": m,
+                "n_workers": plan.n_workers,
+                "loop_us_per_product": round(loop_us, 1),
+                "batched_us_per_product": round(batched_us, 1),
+                "speedup": round(speedup, 2),
+            }
+        )
+        best = rows[-1]
+    path = write_csv("protocol_batch", rows)
+    return [
+        {
+            "name": "protocol_batch",
+            "us_per_call": best["batched_us_per_product"],
+            "derived": f"csv={path} batch={best['batch']} "
+            f"speedup_vs_loop={best['speedup']}x",
+        }
+    ]

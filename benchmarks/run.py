@@ -15,7 +15,16 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from . import cmpc_comm, example1, fig2, fig3, fig4, protocol_scaling, roofline
+    from . import (
+        cmpc_comm,
+        example1,
+        fig2,
+        fig3,
+        fig4,
+        protocol_batch,
+        protocol_scaling,
+        roofline,
+    )
 
     modules = {
         "example1": example1,
@@ -23,6 +32,7 @@ def main() -> None:
         "fig3": fig3,
         "fig4": fig4,
         "protocol_scaling": protocol_scaling,
+        "protocol_batch": protocol_batch,
         "cmpc_comm": cmpc_comm,
         "roofline": roofline,
     }

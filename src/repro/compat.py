@@ -1,0 +1,30 @@
+"""JAX API-drift shims.
+
+The codebase targets current JAX, but must degrade gracefully on older
+installs (this container ships 0.4.x).  Each shim resolves the newest
+spelling first:
+
+* ``shard_map``: ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old), where the replication
+  check kwarg is ``check_vma`` vs ``check_rep``.
+
+``jax.experimental.pallas.tpu`` CompilerParams naming drift is handled
+locally in ``repro.kernels.modmatmul.kernel``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``shard_map`` with the new-API signature."""
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, **kwargs)

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
+
 from ..kernels.modmatmul.ops import mod_matmul
 from .planner import CMPCPlan
 
@@ -137,7 +139,7 @@ def run_phase2_sharded(
         return i_local.astype(jnp.int32).reshape(-1, br, bc)
 
     spec = P(axis)
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(spec, spec, spec, spec),

@@ -193,16 +193,53 @@ def _mulmod_const_f32(x: jnp.ndarray, c: int, p: int) -> jnp.ndarray:
     return _mod_f32(_mod_f32(x_hi * c_hi, pf) + _mod_f32(x_lo * c_lo, pf), pf)
 
 
+def _limb_split(x: jnp.ndarray):
+    hi = jnp.floor(x / LIMB)
+    return hi, x - hi * LIMB
+
+
+def _limb_dot(a_hi, a_lo, b_hi, b_lo, p: int) -> jnp.ndarray:
+    """One <=256-deep limb-decomposed dot, reduced mod p (exact in f32).
+
+    Each single dot accumulates <= 256 products of 8-bit limbs, staying
+    below 2**24 (exact in f32); the two cross dots must be reduced
+    *separately* before adding — their raw sum can reach ~2**25 and
+    lose the low bit.
+    """
+    pf = float(p)
+    f_hihi = int((LIMB * LIMB) % p)  # 2**16 mod p
+    f_mid = int(LIMB % p)  # 2**8 mod p
+    hh = _mod_f32(a_hi @ b_hi, pf)
+    hl = _mod_f32(_mod_f32(a_hi @ b_lo, pf) + _mod_f32(a_lo @ b_hi, pf), pf)
+    ll = _mod_f32(a_lo @ b_lo, pf)
+    return _mod_f32(
+        _mulmod_const_f32(hh, f_hihi, p) + _mulmod_const_f32(hl, f_mid, p) + ll, pf
+    )
+
+
 @partial(jax.jit, static_argnames=("p",))
 def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
     """Exact GF(p) matmul via 8-bit limb decomposition in f32.
 
     a: [..., M, K] int32 in [0, p);  b: [K, N] int32 in [0, p).
     Returns int32 [..., M, N] = a @ b mod p.
+
+    Contractions of depth <= CHUNK_K take a no-padding single-dot fast
+    path (any accumulation <= 256 deep is exact in f32); deeper ones are
+    zero-padded to a CHUNK_K multiple and reduced once per chunk under a
+    scan.  The protocol's per-worker block products are typically far
+    shallower than CHUNK_K, where padding would waste ~CHUNK_K/K of the
+    FLOPs.
     """
     _check_limb_prime(p)
     pf = float(p)
     k = a.shape[-1]
+
+    if k <= CHUNK_K:
+        a_hi, a_lo = _limb_split(a.astype(jnp.float32))
+        b_hi, b_lo = _limb_split(b.astype(jnp.float32))
+        return _limb_dot(a_hi, a_lo, b_hi, b_lo, p).astype(jnp.int32)
+
     pad = (-k) % CHUNK_K
     if pad:
         a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
@@ -210,16 +247,8 @@ def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.nd
         k += pad
     nchunk = k // CHUNK_K
 
-    af = a.astype(jnp.float32)
-    bf = b.astype(jnp.float32)
-    a_hi = jnp.floor(af / LIMB)
-    a_lo = af - a_hi * LIMB
-    b_hi = jnp.floor(bf / LIMB)
-    b_lo = bf - b_hi * LIMB
-
-    # 2**16 mod p and 2**8 mod p combine factors (kept < 2**16).
-    f_hihi = float((LIMB * LIMB) % p)
-    f_mid = float(LIMB % p)
+    a_hi, a_lo = _limb_split(a.astype(jnp.float32))
+    b_hi, b_lo = _limb_split(b.astype(jnp.float32))
 
     out_shape = a.shape[:-1] + (b.shape[-1],)
     acc0 = jnp.zeros(out_shape, jnp.float32)
@@ -236,15 +265,7 @@ def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.nd
     def body(acc, xs):
         ah, al, bh, bl = xs
         # Each dot accumulates <=256 products of values < 2**16: exact in f32.
-        hh = _mod_f32(ah @ bh, pf)
-        hl = _mod_f32(ah @ bl + al @ bh, pf)
-        ll = _mod_f32(al @ bl, pf)
-        chunkv = _mod_f32(
-            _mulmod_const_f32(hh, int(f_hihi), p)
-            + _mulmod_const_f32(hl, int(f_mid), p)
-            + ll,
-            pf,
-        )
+        chunkv = _limb_dot(ah, al, bh, bl, p)
         return _mod_f32(acc + chunkv, pf), None
 
     acc, _ = jax.lax.scan(body, acc0, (ah_c, al_c, bh_c, bl_c))
@@ -263,6 +284,16 @@ def mod_mul(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
 def mod_add(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
     s = a.astype(jnp.uint32) + b.astype(jnp.uint32)
     return (s % jnp.uint32(p)).astype(jnp.int32)
+
+
+def random_field_device(key, shape, p: int = P_DEFAULT) -> jnp.ndarray:
+    """Uniform GF(p) elements drawn on-device with the JAX PRNG.
+
+    Device-resident counterpart of ``Field.random`` (numpy) — used by the
+    batched protocol engine so secret/blinding terms never touch the
+    host.  Returns int32 in [0, p); traceable under jit.
+    """
+    return jax.random.randint(key, shape, 0, p, dtype=jnp.int32)
 
 
 def powers_matrix(points: np.ndarray, powers, p: int = P_DEFAULT) -> np.ndarray:

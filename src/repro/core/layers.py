@@ -25,7 +25,7 @@ import numpy as np
 
 from .constructions import Scheme, build_scheme
 from .gf import Field
-from .planner import BlockShapes, CMPCPlan, make_plan
+from .planner import BlockShapes, CMPCPlan, get_plan, make_plan
 from . import protocol
 
 
@@ -70,10 +70,56 @@ def secure_matmul(
         scale = choose_scales(k, float(np.abs(a).max() + 1e-9), float(np.abs(b).max() + 1e-9), field.p)
     scheme = build_scheme(method, s, t, z)
     shapes = BlockShapes(k=k, ma=ma, mb=mb, s=s, t=t)
-    plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
+    plan = get_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
     aq = field.encode(a, scale)
     bq = field.encode(b, scale)
     yq, trace = protocol.run(plan, aq, bq, seed=seed + 1)
+    y = field.decode(yq, scale * scale)
+    return SecureMatmulResult(y=y, trace=trace, plan=plan)
+
+
+def secure_matmul_batched(
+    a: np.ndarray,
+    b: np.ndarray,
+    method: str = "age",
+    s: int = 2,
+    t: int = 2,
+    z: int = 1,
+    field: Optional[Field] = None,
+    scale: Optional[int] = None,
+    n_spare: int = 0,
+    seed: int = 0,
+    backend: str = "auto",
+) -> SecureMatmulResult:
+    """Privacy-preserving Y[i] = A[i]^T B[i] for a batch of products.
+
+    a: [batch, k, ma];  b: [batch, k, mb] or [k, mb] (a single B — e.g.
+    one weight matrix against a batch of activations — is broadcast).
+    One plan (from the process-wide plan cache) serves every product;
+    all three phases run device-resident via ``protocol.run_batched``,
+    amortizing plan setup and jit compilation across the batch.
+    """
+    field = field or Field()
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    if a.ndim != 3:
+        raise ValueError(f"a must be [batch, k, ma], got {a.shape}")
+    if b.ndim == 2:
+        b = np.broadcast_to(b, (a.shape[0],) + b.shape)
+    batch, k, ma = a.shape
+    if b.shape[:2] != (batch, k):
+        raise ValueError(f"batch/inner dims disagree: {a.shape} vs {b.shape}")
+    mb = b.shape[2]
+    if scale is None:
+        scale = choose_scales(
+            k, float(np.abs(a).max() + 1e-9), float(np.abs(b).max() + 1e-9), field.p
+        )
+    scheme = build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=k, ma=ma, mb=mb, s=s, t=t)
+    plan = get_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
+    aq = field.encode(a, scale)
+    bq = field.encode(b, scale)
+    yq, trace = protocol.run_batched(plan, aq, bq, seed=seed + 1, backend=backend)
     y = field.decode(yq, scale * scale)
     return SecureMatmulResult(y=y, trace=trace, plan=plan)
 
@@ -154,22 +200,18 @@ class PrivateLinear:
         self.blocks = blocks
         self.field = field or Field()
         self.seed = seed
+        # the scheme depends only on ctor args: build it once, not per call
+        self._scheme = build_scheme(method, s, t, z)
         k = self.w.shape[0]
         if k % blocks:
             raise ValueError("blocks must divide the inner dimension")
-        self._plan_cache = {}
 
     def _plan(self, batch: int, kblk: int) -> CMPCPlan:
-        key = (batch, kblk)
-        if key not in self._plan_cache:
-            scheme = build_scheme(self.method, self.s, self.t, self.z)
-            shapes = BlockShapes(
-                k=kblk, ma=batch, mb=self.w.shape[1], s=self.s, t=self.t
-            )
-            self._plan_cache[key] = make_plan(
-                scheme, shapes, field=self.field, seed=self.seed
-            )
-        return self._plan_cache[key]
+        # Delegates to the process-wide plan cache (planner.get_plan):
+        # every PrivateLinear with the same protocol signature shares one
+        # plan's Vandermonde/mixing constants.
+        shapes = BlockShapes(k=kblk, ma=batch, mb=self.w.shape[1], s=self.s, t=self.t)
+        return get_plan(self._scheme, shapes, field=self.field, seed=self.seed)
 
     def __call__(self, x: np.ndarray) -> np.ndarray:
         """x: [batch, k] activations (source 1).  Returns [batch, out]."""

@@ -12,6 +12,12 @@ straggler tolerance in Phase 2 — any ``n_workers`` of the
 ``n_workers + n_spare`` provisioned workers can serve Phase 2 (the
 mixing matrix is recomputed per surviving subset via ``phase2_matrix``),
 and any ``t^2 + z`` of those can serve Phase 3.
+
+``get_plan`` is the cached entry point: one plan per
+``(scheme, shapes, field, n_spare, seed)`` signature, shared
+process-wide so repeated layer calls reuse the Vandermonde / mixing
+constants instead of re-running Gauss-Jordan inversions
+(``plan_cache_info`` / ``plan_cache_clear`` expose the counters).
 """
 from __future__ import annotations
 
@@ -127,6 +133,69 @@ def _phase2_matrix(
     v_g = field.vandermonde(alphas, range(t * t))  # [n_total, t^2]
     # mix[n, n'] = sum_g r[g, n] * v_g[n', g]
     return field.matmul(r.T, v_g.T)  # [N, n_total]
+
+
+# ----------------------------------------------------------------------
+# plan cache
+# ----------------------------------------------------------------------
+# Plans are pure functions of (scheme, shapes, field, n_spare, seed) but
+# cost Vandermonde inversions (Gauss-Jordan mod p in Python) to build.
+# Layer code calls get_plan so repeated calls with the same protocol
+# signature — every forward pass of a PrivateLinear, every step of a
+# batched pipeline — reuse the mixing/decode constants.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+# Plans pin O(n_total^2) host matrices (plus device constants once the
+# batched engine touches them), and callers key on runtime batch sizes,
+# so bound the cache: oldest-inserted entries are evicted first.
+_PLAN_CACHE_MAX = 256
+
+
+def _plan_key(scheme: Scheme, shapes: BlockShapes, field: Field, n_spare: int, seed: int):
+    return (
+        scheme.method,
+        scheme.s,
+        scheme.t,
+        scheme.z,
+        scheme.lam,
+        (shapes.k, shapes.ma, shapes.mb, shapes.s, shapes.t),
+        field.p,
+        n_spare,
+        seed,
+    )
+
+
+def get_plan(
+    scheme: Scheme,
+    shapes: BlockShapes,
+    field: Optional[Field] = None,
+    n_spare: int = 0,
+    seed: int = 0,
+) -> CMPCPlan:
+    """Memoized ``make_plan``: one plan per (scheme, shapes, field,
+    n_spare, seed) signature, shared across layers and batches."""
+    field = field or Field()
+    key = _plan_key(scheme, shapes, field, n_spare, seed)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    else:
+        _PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
+def plan_cache_info() -> dict:
+    """{'hits', 'misses', 'size'} counters for the process-wide cache."""
+    return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS.update(hits=0, misses=0)
 
 
 def make_plan(

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def pipeline_forward(
     stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -66,7 +68,7 @@ def pipeline_forward(
         (buf, outs), _ = jax.lax.scan(step, (buf, outs), jnp.arange(steps))
         return outs[None]  # [1, steps, ...] stage-local
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(None)),

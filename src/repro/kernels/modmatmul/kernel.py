@@ -30,6 +30,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ...core.gf import P_DEFAULT
 
+# JAX renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams across
+# releases; resolve whichever this install provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
 LIMB = 256.0
 
 
@@ -68,12 +74,14 @@ def _modmatmul_kernel(a_ref, b_ref, o_ref, *, p: int):
     b_hi = jnp.floor(bf / LIMB)
     b_lo = bf - b_hi * LIMB
 
-    # Four MXU matmuls per tile; each accumulates <= bk=256 products of
-    # values < 2**16 -> partial sums < 2**24, exact in f32.
+    # Four MXU matmuls per tile; each single dot accumulates <= bk=256
+    # products of 8-bit limbs -> partial sums < 2**24, exact in f32.
+    # The two cross dots are reduced separately before adding: their raw
+    # sum can reach ~2**25 and lose the low bit.
     hh = _modf32(jnp.dot(a_hi, b_hi, preferred_element_type=jnp.float32), pf)
     mid = _modf32(
-        jnp.dot(a_hi, b_lo, preferred_element_type=jnp.float32)
-        + jnp.dot(a_lo, b_hi, preferred_element_type=jnp.float32),
+        _modf32(jnp.dot(a_hi, b_lo, preferred_element_type=jnp.float32), pf)
+        + _modf32(jnp.dot(a_lo, b_hi, preferred_element_type=jnp.float32), pf),
         pf,
     )
     ll = _modf32(jnp.dot(a_lo, b_lo, preferred_element_type=jnp.float32), pf)
@@ -116,7 +124,7 @@ def modmatmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

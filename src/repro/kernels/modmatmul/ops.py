@@ -44,18 +44,21 @@ def mod_matmul(
 ) -> jnp.ndarray:
     """a [..., M, K] @ b [..., K, N] mod p (int32), batched over leading dims.
 
-    Batch dims of ``a`` and ``b`` must match (or one side may omit them).
+    Batch dims of ``a`` and ``b`` must broadcast against each other; one
+    side may omit them entirely (e.g. a 2D constant matrix against a
+    batched operand) — the unbatched side is broadcast before vmapping.
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "f32limb"
 
     if backend == "f32limb":
         if b.ndim == 2:
+            # mod_matmul_f32 natively supports [..., M, K] @ [K, N].
             return mod_matmul_f32(a, b, p)
-        # batched rhs: vmap the portable path
-        batch = a.shape[:-2]
-        af = a.reshape((-1,) + a.shape[-2:])
-        bf = b.reshape((-1,) + b.shape[-2:])
+        # batched rhs: broadcast the unbatched side, vmap the portable path
+        batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+        af = jnp.broadcast_to(a, batch + a.shape[-2:]).reshape((-1,) + a.shape[-2:])
+        bf = jnp.broadcast_to(b, batch + b.shape[-2:]).reshape((-1,) + b.shape[-2:])
         out = jax.vmap(lambda x, y: mod_matmul_f32(x, y, p))(af, bf)
         return out.reshape(batch + out.shape[-2:])
 
@@ -76,7 +79,7 @@ def mod_matmul(
     if a.ndim == 2 and b.ndim == 2:
         out = call(ap, bp)
     else:
-        batch = a.shape[:-2] or b.shape[:-2]
+        batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
         af = jnp.broadcast_to(ap, batch + ap.shape[-2:]).reshape((-1,) + ap.shape[-2:])
         bf = jnp.broadcast_to(bp, batch + bp.shape[-2:]).reshape((-1,) + bp.shape[-2:])
         out = jax.vmap(call)(af, bf).reshape(batch + (ap.shape[-2], bp.shape[-1]))
@@ -89,9 +92,10 @@ def polyeval(
     """Evaluate matrix-coefficient polynomials at many points.
 
     vander: [N, K] powers matrix (alpha_n ** power_k mod p)
-    coeffs: [K, R, C] stacked matrix coefficients
-    returns [N, R, C]: F(alpha_n) = sum_k vander[n, k] * coeffs[k].
+    coeffs: [..., K, R, C] stacked matrix coefficients (leading batch
+            dims allowed: the same points evaluate every batch element)
+    returns [..., N, R, C]: F(alpha_n) = sum_k vander[n, k] * coeffs[k].
     """
-    k, r, c = coeffs.shape
-    flat = mod_matmul(vander, coeffs.reshape(k, r * c), p=p, **kw)
-    return flat.reshape(vander.shape[0], r, c)
+    *batch, k, r, c = coeffs.shape
+    flat = mod_matmul(vander, coeffs.reshape(tuple(batch) + (k, r * c)), p=p, **kw)
+    return flat.reshape(tuple(batch) + (vander.shape[0], r, c))

@@ -15,21 +15,30 @@ import math
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
+
+# jax.sharding.AxisType (and the axis_types= kwarg of jax.make_mesh)
+# only exist on newer JAX releases; on older installs every axis is
+# implicitly Auto, so the kwarg is simply dropped.
+try:
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed JAX
+    AxisType = None
 
 
-def _auto(n):
-    return (AxisType.Auto,) * n
+def _axis_kw(n):
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))
 
 
 def make_elastic_mesh(model_parallel: Optional[int] = None):
@@ -40,9 +49,7 @@ def make_elastic_mesh(model_parallel: Optional[int] = None):
         while n % model_parallel:
             model_parallel //= 2
     data = n // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"), axis_types=_auto(2)
-    )
+    return jax.make_mesh((data, model_parallel), ("data", "model"), **_axis_kw(2))
 
 
 def describe(mesh) -> str:

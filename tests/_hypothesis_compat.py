@@ -1,0 +1,207 @@
+"""Minimal offline stand-in for the ``hypothesis`` property-testing API.
+
+This environment has no network and no ``hypothesis`` wheel, but 7 test
+modules are written as property tests.  This shim provides the small
+surface they use — ``given``, ``settings``, ``strategies`` (``integers``,
+``sampled_from``, ``booleans``, ``floats``, ``data``) and ``assume`` —
+and sweeps a *deterministic* example grid instead of random shrinking:
+
+* example 0 pins every strategy to its lower bound / first element,
+* example 1 pins every strategy to its upper bound / last element,
+* examples 2..max_examples-1 draw from a ``numpy`` generator seeded by
+  ``crc32(test_name) + index``, so failures reproduce run-to-run.
+
+On failure the falsifying example is printed and the original exception
+re-raised, mirroring hypothesis's report.  Test modules import this via
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+so the real hypothesis is used whenever it is installed.
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import zlib
+
+import numpy as np
+
+_SETTINGS_ATTR = "_hc_max_examples"
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Assumption(Exception):
+    """Raised by assume(False): skip this example, not a failure."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class HealthCheck:
+    """Placeholder enum — accepted and ignored."""
+
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording max_examples; works above or below @given."""
+
+    def deco(func):
+        setattr(func, _SETTINGS_ATTR, int(max_examples))
+        return func
+
+    return deco
+
+
+class _Strategy:
+    """A deterministic-sweepable value source."""
+
+    def draw(self, rng: np.random.Generator, mode: str):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, rng, mode):
+        if mode == "lo":
+            return self.lo
+        if mode == "hi":
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def draw(self, rng, mode):
+        if mode == "lo":
+            return self.elements[0]
+        if mode == "hi":
+            return self.elements[-1]
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng, mode):
+        if mode == "lo":
+            return False
+        if mode == "hi":
+            return True
+        return bool(rng.integers(0, 2))
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draw(self, rng, mode):
+        if mode == "lo":
+            return self.lo
+        if mode == "hi":
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _DataObject:
+    """Interactive draws inside the test body (st.data())."""
+
+    def __init__(self, rng: np.random.Generator, mode: str):
+        self._rng = rng
+        self._mode = mode
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rng, self._mode)
+
+
+class _Data(_Strategy):
+    def draw(self, rng, mode):
+        return _DataObject(rng, mode)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Booleans()
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Data()
+
+
+def _stable_seed(name: str, index: int) -> int:
+    return (zlib.crc32(name.encode()) + index) & 0x7FFFFFFF
+
+
+def given(**strats):
+    """Sweep the deterministic grid over the keyword strategies."""
+
+    for k, s in strats.items():
+        if not isinstance(s, _Strategy):
+            raise TypeError(f"@given argument {k!r} is not a strategy: {s!r}")
+
+    def deco(func):
+        @functools.wraps(func)
+        def wrapper(*args, **fixture_kwargs):
+            n = getattr(
+                wrapper,
+                _SETTINGS_ATTR,
+                getattr(func, _SETTINGS_ATTR, _DEFAULT_MAX_EXAMPLES),
+            )
+            for i in range(n):
+                mode = "lo" if i == 0 else ("hi" if i == 1 else "rand")
+                rng = np.random.default_rng(_stable_seed(func.__qualname__, i))
+                kwargs = {k: s.draw(rng, mode) for k, s in strats.items()}
+                try:
+                    func(*args, **kwargs, **fixture_kwargs)
+                except _Assumption:
+                    continue
+                except Exception:
+                    shown = {
+                        k: v for k, v in kwargs.items()
+                        if not isinstance(v, _DataObject)
+                    }
+                    print(
+                        f"Falsifying example (#{i}/{n}): "
+                        f"{func.__qualname__}({shown!r})",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # functools.wraps sets __wrapped__, which makes pytest resolve
+        # the *original* signature and demand fixtures named after the
+        # strategies; the wrapper takes no test parameters.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+st = strategies

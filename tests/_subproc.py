@@ -1,0 +1,16 @@
+"""Shared environment for tests that spawn python subprocesses.
+
+The subprocess env is minimal on purpose (reproducible drivers), but
+``JAX_PLATFORMS`` must pass through: without it the child re-probes for
+accelerators, which stalls for minutes on hosts whose TPU/GPU runtime
+is absent.
+"""
+import os
+
+
+def subprocess_env(**overrides) -> dict:
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    env.update(overrides)
+    return env

@@ -6,3 +6,7 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Make the offline hypothesis fallback (tests/_hypothesis_compat.py)
+# importable regardless of how pytest computed rootdir.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,184 @@
+"""Batched device-resident protocol engine + kernel broadcasting
+regressions: run_batched vs per-sample run, plan-cache behavior, and the
+mod_matmul one-sided-batch bugs (2D @ batched, batched @ 2D) on both
+backends."""
+import numpy as np
+import pytest
+
+from repro.core import constructions as C
+from repro.core import planner
+from repro.core import protocol as proto
+from repro.core.gf import CHUNK_K, Field, mod_matmul_f32
+from repro.core.layers import secure_matmul_batched
+from repro.core.planner import BlockShapes, get_plan, make_plan
+from repro.kernels.modmatmul import mod_matmul, modmatmul_ref
+
+P = 65521
+
+BACKENDS = [
+    ("f32limb", {}),
+    ("pallas", {"interpret": True}),
+]
+
+
+# ----------------------------------------------------------------------
+# mod_matmul one-sided batch broadcasting (regression: vmap axis error)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_2d_lhs_batched_rhs(backend, kw):
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, P, (9, 33)).astype(np.int32)
+    b = rng.integers(0, P, (4, 33, 11)).astype(np.int32)
+    want = np.stack([modmatmul_ref(a, b[i], P) for i in range(4)])
+    got = np.asarray(mod_matmul(a, b, p=P, backend=backend, **kw))
+    assert np.array_equal(want, got)
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_batched_lhs_2d_rhs(backend, kw):
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, P, (4, 9, 33)).astype(np.int32)
+    b = rng.integers(0, P, (33, 11)).astype(np.int32)
+    want = np.stack([modmatmul_ref(a[i], b, P) for i in range(4)])
+    got = np.asarray(mod_matmul(a, b, p=P, backend=backend, **kw))
+    assert np.array_equal(want, got)
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_broadcastable_batch_dims(backend, kw):
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, P, (1, 5, 17)).astype(np.int32)
+    b = rng.integers(0, P, (3, 17, 7)).astype(np.int32)
+    want = np.stack([modmatmul_ref(a[0], b[i], P) for i in range(3)])
+    got = np.asarray(mod_matmul(a, b, p=P, backend=backend, **kw))
+    assert np.array_equal(want, got)
+
+
+def test_limb_fast_path_boundary():
+    """k <= CHUNK_K takes the no-padding path; both sides of the
+    boundary must agree with the oracle."""
+    rng = np.random.default_rng(3)
+    for k in (1, 31, CHUNK_K, CHUNK_K + 1, 2 * CHUNK_K + 5):
+        a = rng.integers(0, P, (7, k)).astype(np.int32)
+        b = rng.integers(0, P, (k, 5)).astype(np.int32)
+        got = np.asarray(mod_matmul_f32(a, b, P))
+        assert np.array_equal(modmatmul_ref(a, b, P), got), k
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_limb_cross_term_exactness(backend, kw):
+    """Regression: values with dense high limbs (>= P-241, hi limb 255)
+    drive the raw cross-term sum a_hi@b_lo + a_lo@b_hi past 2**24 at
+    full 256-deep accumulation; the two cross dots must be reduced
+    separately or the result silently loses the low bit."""
+    rng = np.random.default_rng(99)
+    for trial in range(8):
+        a = rng.integers(P - 241, P, (8, CHUNK_K)).astype(np.int32)
+        b = rng.integers(P - 241, P, (CHUNK_K, 8)).astype(np.int32)
+        got = np.asarray(mod_matmul(a, b, p=P, backend=backend, **kw))
+        assert np.array_equal(modmatmul_ref(a, b, P), got), (backend, trial)
+
+
+# ----------------------------------------------------------------------
+# batched protocol engine
+# ----------------------------------------------------------------------
+CASES = [("age", 2, 2, 2), ("polydot", 2, 3, 3), ("age", 2, 1, 3)]
+
+
+@pytest.mark.parametrize("method,s,t,z", CASES)
+def test_run_batched_equals_per_sample(method, s, t, z):
+    field = Field()
+    rng = np.random.default_rng(10)
+    sch = C.build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=s * 4, ma=t * 4, mb=t * 2, s=s, t=t)
+    plan = make_plan(sch, shapes, seed=1)
+    batch = 5
+    a = field.random(rng, (batch, shapes.k, shapes.ma))
+    b = field.random(rng, (batch, shapes.k, shapes.mb))
+    y, trace = proto.run_batched(plan, a, b, seed=2)
+    for i in range(batch):
+        yi, ti = proto.run(plan, a[i], b[i], seed=3 + i)
+        assert np.array_equal(y[i], yi)
+        assert np.array_equal(y[i], field.matmul(a[i].T, b[i]))
+    # trace accounts the whole batch
+    _, t1 = proto.run(plan, a[0], b[0], seed=0)
+    assert trace.total == batch * t1.total
+
+
+def test_run_batched_2d_promotion():
+    field = Field()
+    rng = np.random.default_rng(11)
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    y, _ = proto.run_batched(plan, a, b)
+    assert y.shape == (1, 8, 4)
+    assert np.array_equal(y[0], field.matmul(a.T, b))
+
+
+def test_run_batched_stragglers():
+    field = Field()
+    rng = np.random.default_rng(12)
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, n_spare=4)
+    a = field.random(rng, (3, 8, 8))
+    b = field.random(rng, (3, 8, 4))
+    ids2 = np.array([i for i in range(plan.n_total) if i not in (0, 2)])
+    ids2 = ids2[: plan.n_workers]
+    ids3 = np.arange(3, 3 + plan.decode_threshold)
+    y, _ = proto.run_batched(plan, a, b, seed=4, phase2_ids=ids2, phase3_ids=ids3)
+    for i in range(3):
+        assert np.array_equal(y[i], field.matmul(a[i].T, b[i]))
+
+
+def test_run_batched_shape_validation():
+    sch = C.build_scheme("age", 2, 2, 1)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes)
+    with pytest.raises(ValueError):
+        proto.run_batched(plan, np.zeros((2, 8, 6)), np.zeros((2, 8, 4)))
+    with pytest.raises(ValueError):
+        proto.run_batched(plan, np.zeros((2, 8, 8)), np.zeros((3, 8, 4)))
+
+
+def test_device_plan_cached_on_plan():
+    sch = C.build_scheme("age", 2, 2, 1)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes)
+    assert proto.device_plan(plan) is proto.device_plan(plan)
+
+
+# ----------------------------------------------------------------------
+# plan cache
+# ----------------------------------------------------------------------
+def test_plan_cache_hits():
+    planner.plan_cache_clear()
+    sch = C.build_scheme("age", 2, 2, 1)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    p1 = get_plan(sch, shapes)
+    info = planner.plan_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 0
+    p2 = get_plan(sch, shapes)
+    assert p2 is p1  # identical signature -> same plan object
+    info = planner.plan_cache_info()
+    assert info["hits"] == 1 and info["size"] == 1
+    # a different shape is a different plan
+    p3 = get_plan(sch, BlockShapes(k=8, ma=8, mb=8, s=2, t=2))
+    assert p3 is not p1
+    assert planner.plan_cache_info()["size"] == 2
+    planner.plan_cache_clear()
+    assert planner.plan_cache_info() == {"hits": 0, "misses": 0, "size": 0}
+
+
+def test_secure_matmul_batched_shared_weight():
+    rng = np.random.default_rng(13)
+    batch = 4
+    xs = rng.normal(size=(batch, 16, 12))
+    w = rng.normal(size=(16, 8))
+    res = secure_matmul_batched(xs, w, s=2, t=2, z=2)
+    assert res.y.shape == (batch, 12, 8)
+    for i in range(batch):
+        assert np.abs(res.y[i] - xs[i].T @ w).max() < 1.0

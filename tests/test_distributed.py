@@ -6,18 +6,17 @@ import textwrap
 
 import pytest
 
+from _subproc import subprocess_env
+
 
 def _run(code: str, devices: int = 8):
     res = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True,
         text=True,
-        env={
-            "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
-            "PYTHONPATH": "src",
-            "PATH": "/usr/bin:/bin",
-            "HOME": "/root",
-        },
+        env=subprocess_env(
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}"
+        ),
         cwd=".",
         timeout=600,
     )

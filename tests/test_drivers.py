@@ -3,12 +3,14 @@ run end-to-end at reduced scale in subprocesses."""
 import subprocess
 import sys
 
+from _subproc import subprocess_env
+
 
 def _run(args, timeout=560):
     res = subprocess.run(
         [sys.executable, "-m"] + args,
         capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env=subprocess_env(),
         cwd=".",
     )
     assert res.returncode == 0, res.stdout + res.stderr

@@ -1,7 +1,10 @@
 """Field arithmetic: host oracle + device limb paths."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic example grid
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.gf import Field, P_DEFAULT, mod_matmul_f32
 

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic example grid
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config, reduced
 from repro.configs.base import MoEConfig, ModelConfig

@@ -3,6 +3,8 @@ import subprocess
 import sys
 import textwrap
 
+from _subproc import subprocess_env
+
 
 def test_pipeline_matches_sequential():
     code = """
@@ -31,8 +33,7 @@ def test_pipeline_matches_sequential():
     res = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=300,
-        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
-             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        env=subprocess_env(XLA_FLAGS="--xla_force_host_platform_device_count=4"),
         cwd=".",
     )
     assert res.returncode == 0, res.stdout + res.stderr
