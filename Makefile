@@ -3,7 +3,7 @@
 
 PYTHON ?= python
 
-.PHONY: test test-fast bench quickstart
+.PHONY: test test-fast bench bench-json quickstart
 
 test:
 	$(PYTHON) -m pytest -q
@@ -13,6 +13,11 @@ test-fast:
 
 bench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.run
+
+# Machine-readable perf snapshot: refreshes BENCH_protocol.json at the
+# repo root so later PRs can track regressions.
+bench-json:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.protocol_batch
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -1,4 +1,5 @@
-"""Batched vs looped protocol execution: per-product wall time.
+"""Batched vs looped protocol execution: per-product wall time,
+per-phase breakdown, and kernel padding-waste accounting.
 
 The paper accounts computation overhead *per multiplication*; this
 benchmark measures how much of the Python/host overhead of ``run`` the
@@ -8,10 +9,26 @@ each batch size it reports the per-product latency of
 * ``loop``    — a Python loop of per-sample ``protocol.run`` calls,
 * ``batched`` — one ``protocol.run_batched`` call over the whole batch,
 
-plus the resulting speedup.  The batched path shares one jitted
-computation and one plan's device constants across all products.
+plus the resulting speedup and the speedup against the recorded PR-1
+baseline of the batched engine itself (fixed-tile kernels, vmapped
+padded-2D launches, per-worker PRNG blinding draws).
+
+Besides the CSV under results/bench/, the run emits machine-readable
+``BENCH_protocol.json`` at the repo root (``make bench-json``) so later
+PRs can track the perf trajectory:
+
+* ``batches``        — the table above,
+* ``phases_us``      — wall time of each protocol phase (reference
+                        path, batch of 1): share / multiply / reduce /
+                        decode,
+* ``padding_waste``  — per hot-matmul-shape fraction of MXU MACs spent
+                        on padding under the fixed legacy 128/128/256
+                        tiling vs the shape-adaptive ``pick_tiles``.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -19,10 +36,83 @@ from repro.core import constructions as C
 from repro.core import protocol as proto
 from repro.core.gf import Field
 from repro.core.planner import BlockShapes, get_plan
+from repro.kernels.modmatmul.ops import padding_waste, pick_tiles
 
 from .common import timeit, write_csv
 
-BATCHES = (1, 8, 32)
+BATCHES = (1, 8, 16, 32)
+
+# Batched-engine per-product latency of the PR-1 revision (fixed
+# 128/128/256 tiles, vmap-of-padded-2D kernel launches, broadcast
+# constant matrices, per-worker blinding draws), measured on this
+# benchmark's default config (m=64, age, s=t=z=2, CPU f32limb backend)
+# before the batched/tile-adaptive kernel layer landed.  Kept as the
+# reference point for the perf trajectory.
+PR1_BASELINE_US = {1: 6995.5, 8: 3285.1, 16: 3033.8, 32: 3851.4}
+
+FIXED_TILES = (128, 128, 256)  # the legacy hardcoded tiling
+
+JSON_NAME = "BENCH_protocol.json"
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _phase_times(plan, a, b) -> dict:
+    """Wall time (us) of each reference-path phase for one product."""
+    rng = np.random.default_rng(7)
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    h = proto.worker_multiply(plan, fa, fb)
+    i_evals = proto.degree_reduce(plan, h, rng)
+    rng2 = np.random.default_rng(7)
+    return {
+        "share": round(
+            timeit(lambda: np.asarray(proto.share_a(plan, a, rng2)), repeat=3), 1
+        ),
+        "multiply": round(
+            timeit(lambda: np.asarray(proto.worker_multiply(plan, fa, fb)), repeat=3), 1
+        ),
+        "reduce": round(
+            timeit(
+                lambda: np.asarray(proto.degree_reduce(plan, h, np.random.default_rng(7))),
+                repeat=3,
+            ),
+            1,
+        ),
+        "decode": round(timeit(lambda: proto.reconstruct(plan, i_evals), repeat=3), 1),
+    }
+
+
+def _padding_report(plan) -> list:
+    """Padding-waste ratios of the protocol's hot matmul shapes under
+    the legacy fixed tiling vs the adaptive one."""
+    sh = plan.shapes
+    t = plan.scheme.t
+    na = len(plan.scheme.fa_powers)
+    bra, bca = sh.blk_a
+    brb, bcb = sh.blk_b
+    blk_flat = (sh.ma // t) * (sh.mb // t)
+    sites = [
+        ("phase1_polyeval_a", plan.n_total, na, bra * bca),
+        ("phase2_worker_multiply", bra, bca, bcb),
+        ("phase2_mix", plan.n_total, plan.n_workers, blk_flat),
+        ("phase3_decode", plan.decode_threshold, plan.decode_threshold, blk_flat),
+    ]
+    out = []
+    for name, m, k, n in sites:
+        adaptive = pick_tiles(m, k, n)
+        out.append(
+            {
+                "site": name,
+                "shape_mkn": [m, k, n],
+                "tiles_adaptive": list(adaptive),
+                "waste_fixed": round(padding_waste(m, k, n, FIXED_TILES), 4),
+                "waste_adaptive": round(padding_waste(m, k, n, adaptive), 4),
+            }
+        )
+    return out
 
 
 def run():
@@ -48,8 +138,12 @@ def run():
             np.asarray(y)
 
         loop_us = timeit(loop, repeat=3) / batch
-        batched_us = timeit(batched, repeat=3) / batch
+        # the batched call is cheap enough to repeat more: the median
+        # over 7 keeps one-off scheduler hiccups out of the committed
+        # BENCH_protocol.json trajectory
+        batched_us = timeit(batched, repeat=7, warmup=2) / batch
         speedup = loop_us / batched_us
+        base = PR1_BASELINE_US.get(batch)
         rows.append(
             {
                 "batch": batch,
@@ -58,15 +152,46 @@ def run():
                 "loop_us_per_product": round(loop_us, 1),
                 "batched_us_per_product": round(batched_us, 1),
                 "speedup": round(speedup, 2),
+                "pr1_baseline_us": base,
+                "speedup_vs_pr1": round(base / batched_us, 2) if base else None,
             }
         )
         best = rows[-1]
     path = write_csv("protocol_batch", rows)
+
+    a1 = field.random(rng, (m, m))
+    b1 = field.random(rng, (m, m))
+    report = {
+        "bench": "protocol_batch",
+        "config": {
+            "m": m,
+            "method": "age",
+            "s": s,
+            "t": t,
+            "z": z,
+            "n_workers": plan.n_workers,
+            "n_total": plan.n_total,
+        },
+        "batches": rows,
+        "phases_us": _phase_times(plan, a1, b1),
+        "padding_waste": _padding_report(plan),
+    }
+    json_path = os.path.join(_repo_root(), JSON_NAME)
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
     return [
         {
             "name": "protocol_batch",
             "us_per_call": best["batched_us_per_product"],
-            "derived": f"csv={path} batch={best['batch']} "
-            f"speedup_vs_loop={best['speedup']}x",
+            "derived": f"csv={path} json={json_path} batch={best['batch']} "
+            f"speedup_vs_loop={best['speedup']}x "
+            f"speedup_vs_pr1={best['speedup_vs_pr1']}x",
         }
     ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

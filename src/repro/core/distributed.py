@@ -58,7 +58,7 @@ def run_phase2_sharded(
     mesh: Mesh,
     axis: str = "workers",
     mode: str = "all_to_all",
-    matmul_backend: str = "f32limb",
+    matmul_backend: str = "auto",
     return_compiled: bool = False,
 ) -> np.ndarray:
     """Workers compute H and run the G-exchange on a device mesh.
@@ -66,6 +66,11 @@ def run_phase2_sharded(
     fa: [n_total, br, bk] shares, fb: [n_total, bk, bc]; noise:
     [n_workers, z, br, bc] per-worker blinding matrices R_w^{(n)}.
     Returns I(alpha_n) for all (unpadded) provisioned workers.
+
+    ``matmul_backend`` threads through to the kernel layer
+    (``auto``/``pallas``/``f32limb``): the per-shard worker multiply is
+    a batched mod_matmul, so on TPU it lowers to one Pallas launch per
+    shard with the local worker count on the batch grid axis.
     """
     p = plan.field.p
     d = mesh.shape[axis]

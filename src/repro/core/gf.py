@@ -36,6 +36,14 @@ P_DEFAULT = 65521
 # 255*255*256 = 16_646_400 < 2**24.
 CHUNK_K = 256
 
+# Lazy-reduction depth bound for *pure-f32* pipelines (the Pallas
+# kernel): the two cross-limb dots may be summed raw before a single
+# reduction iff 2 * depth * 255**2 < 2**24, i.e. depth <= 129.  At
+# depth <= 128 the final recombination may also fold the raw low-limb
+# dot and the running accumulator into one reduction:
+# 3*(p-1) + 128*255**2 = 8_519_760 < 2**24 for any p < 2**16.
+LAZY_K = 128
+
 LIMB = 256  # limb base
 
 
@@ -95,12 +103,38 @@ class Field:
     # ------------------------------------------------------------------
     # structured host helpers
     # ------------------------------------------------------------------
+    def _pow_table(self, base: np.ndarray, exps: np.ndarray) -> np.ndarray:
+        """T[n, j] = base[n] ** exps[j] (mod p) by column-wise repeated
+        squaring: one vectorized squaring pass per exponent bit instead
+        of a scalar ``pow`` per element.  exps must be non-negative."""
+        out = np.ones((base.size, exps.size), np.int64)
+        sq = base % self.p
+        e = exps.astype(np.int64).copy()
+        while e.any():
+            mask = (e & 1).astype(bool)
+            if mask.any():
+                # (p-1)**2 < 2**62 for p < 2**31: int64-exact.
+                out[:, mask] = (out[:, mask] * sq[:, None]) % self.p
+            e >>= 1
+            sq = (sq * sq) % self.p
+        return out
+
     def vandermonde(self, points, powers) -> np.ndarray:
         """V[n, j] = points[n] ** powers[j]  (mod p)."""
-        points = np.asarray(points, np.int64) % self.p
-        powers = list(int(u) for u in powers)
-        cols = [np.array([self.pow(x, u) for x in points], np.int64) for u in powers]
-        return np.stack(cols, axis=1)
+        points = np.atleast_1d(np.asarray(points, np.int64)) % self.p
+        exps = np.asarray([int(u) for u in powers], np.int64)
+        out = np.ones((points.size, exps.size), np.int64)
+        if exps.size == 0:
+            return out
+        pos = exps >= 0
+        if pos.any():
+            out[:, pos] = self._pow_table(points, exps[pos])
+        if (~pos).any():
+            if np.any(points == 0):
+                raise ZeroDivisionError("0 has no inverse in GF(p)")
+            inv_pts = self._pow_table(points, np.array([self.p - 2]))[:, 0]
+            out[:, ~pos] = self._pow_table(inv_pts, -exps[~pos])
+        return out
 
     def solve(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
         """Solve a @ x = b (mod p) by Gauss-Jordan elimination."""
@@ -166,54 +200,75 @@ def _check_limb_prime(p: int):
         raise ValueError("f32 limb path requires p < 2**16")
 
 
-def _mod_f32(x: jnp.ndarray, p: float) -> jnp.ndarray:
-    """x mod p for exact-integer-valued f32 x with x < 2**24.
-
-    f32 division rounds, so floor(x/p) can be off by one; both products
-    q*p and the correction arithmetic stay exact (< 2**24), so a single
-    conditional fix-up on each side restores exactness.
-    """
-    q = jnp.floor(x / p)
-    r = x - q * p
-    r = jnp.where(r < 0, r + p, r)
-    return jnp.where(r >= p, r - p, r)
-
-
-def _mulmod_const_f32(x: jnp.ndarray, c: int, p: int) -> jnp.ndarray:
-    """x * c mod p for f32 x in [0, p), constant c in [0, p), p < 2**16.
-
-    Decomposes x into 8-bit limbs so every product stays < 2**24 (f32
-    exact-integer range) for *any* 16-bit prime.
-    """
-    pf = float(p)
-    c_hi = float((c * LIMB) % p)  # (256*c mod p) < 2**16
-    c_lo = float(c % p)
-    x_hi = jnp.floor(x / LIMB)  # < 256
-    x_lo = x - x_hi * LIMB  # < 256
-    return _mod_f32(_mod_f32(x_hi * c_hi, pf) + _mod_f32(x_lo * c_lo, pf), pf)
-
-
 def _limb_split(x: jnp.ndarray):
     hi = jnp.floor(x / LIMB)
     return hi, x - hi * LIMB
 
 
-def _limb_dot(a_hi, a_lo, b_hi, b_lo, p: int) -> jnp.ndarray:
-    """One <=256-deep limb-decomposed dot, reduced mod p (exact in f32).
+def _limb_dot_u32(dot, a_hi, a_lo, b_hi, b_lo, p: int, acc=None) -> jnp.ndarray:
+    """One <=256-deep limb-decomposed contraction, reduced mod p.
 
-    Each single dot accumulates <= 256 products of 8-bit limbs, staying
-    below 2**24 (exact in f32); the two cross dots must be reduced
-    *separately* before adding — their raw sum can reach ~2**25 and
-    lose the low bit.
+    The four limb dots run on the matrix unit in f32 (each accumulates
+    <= 256 products of 8-bit limbs, staying below 2**24 — exact in f32);
+    the f32 -> uint32 handoff is therefore exact, and all recombination
+    happens lazily in uint32 where the headroom is 2**32 instead of
+    2**24.  Per-dot reductions disappear entirely: the cross dots are
+    summed raw (< 2**25), the low-limb dot and the running accumulator
+    fold into the final reduction, and the recombination constants are
+    applied with a *static* overflow check that pre-reduces only when
+    bound * c could actually exceed uint32 range.
+
+    ``dot`` is any f32 contraction of depth <= CHUNK_K (a closure over
+    ``lax.dot_general`` dimension numbers, so the same code serves 2D,
+    batched, and one-sided-constant operand layouts).  ``acc`` is an
+    optional uint32 accumulator in [0, p).  Returns uint32 in [0, p).
     """
-    pf = float(p)
+    pu = jnp.uint32(p)
     f_hihi = int((LIMB * LIMB) % p)  # 2**16 mod p
     f_mid = int(LIMB % p)  # 2**8 mod p
-    hh = _mod_f32(a_hi @ b_hi, pf)
-    hl = _mod_f32(_mod_f32(a_hi @ b_lo, pf) + _mod_f32(a_lo @ b_hi, pf), pf)
-    ll = _mod_f32(a_lo @ b_lo, pf)
-    return _mod_f32(
-        _mulmod_const_f32(hh, f_hihi, p) + _mulmod_const_f32(hl, f_mid, p) + ll, pf
+    hh = dot(a_hi, b_hi).astype(jnp.uint32)  # < 2**24
+    mid = dot(a_hi, b_lo).astype(jnp.uint32) + dot(a_lo, b_hi).astype(jnp.uint32)
+    ll = dot(a_lo, b_lo).astype(jnp.uint32)  # < 2**24
+
+    def mulc(x, c, xmax):
+        # x * c mod p for x <= xmax; pre-reduce x only when the raw
+        # product could overflow uint32 (static check — c, xmax are
+        # Python ints).
+        if c == 0:
+            return jnp.zeros_like(x)
+        if xmax * c >= 1 << 32:
+            x = x % pu
+        return (x * jnp.uint32(c)) % pu
+
+    tile = mulc(hh, f_hihi, (1 << 24) - 1) + mulc(mid, f_mid, (1 << 25) - 1) + ll
+    # tile < 2*p + 2**24 < 2**25; adding acc (< p) stays far below 2**32.
+    if acc is not None:
+        tile = tile + acc
+    return tile % pu
+
+
+def _contract_dnums(a_ndim: int, b_ndim: int, n_batch: int):
+    """dot_general dimension numbers for [..., M, K] @ [..., K, N].
+
+    Returns (contract_dims, batch_dims, a_kaxis, b_kaxis, move_m) where
+    ``move_m`` flags the 2D-LHS/batched-RHS layout whose raw output is
+    [M, *batch, N] and needs the M axis moved back before returning.
+    """
+    if b_ndim == 2:
+        # [..., M, K] @ [K, N] -> [..., M, N]
+        return ((a_ndim - 1,), (0,)), ((), ()), a_ndim - 1, 0, False
+    if a_ndim == 2:
+        # [M, K] @ [*batch, K, N] -> [M, *batch, N]: the constant LHS is
+        # contracted (and limb-split) ONCE instead of being broadcast
+        # per batch element.
+        return ((1,), (b_ndim - 2,)), ((), ()), 1, b_ndim - 2, True
+    batch = tuple(range(n_batch))
+    return (
+        ((n_batch + 1,), (n_batch,)),
+        (batch, batch),
+        n_batch + 1,
+        n_batch,
+        False,
     )
 
 
@@ -221,7 +276,10 @@ def _limb_dot(a_hi, a_lo, b_hi, b_lo, p: int) -> jnp.ndarray:
 def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
     """Exact GF(p) matmul via 8-bit limb decomposition in f32.
 
-    a: [..., M, K] int32 in [0, p);  b: [K, N] int32 in [0, p).
+    a: [..., M, K] @ b: [..., K, N] (int32 in [0, p)) with numpy-style
+    broadcasting over the leading batch dims; either side may be a 2D
+    constant matrix, which is contracted via ``dot_general`` without
+    materializing per-batch copies (and limb-split exactly once).
     Returns int32 [..., M, N] = a @ b mod p.
 
     Contractions of depth <= CHUNK_K take a no-padding single-dot fast
@@ -232,44 +290,68 @@ def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.nd
     FLOPs.
     """
     _check_limb_prime(p)
-    pf = float(p)
-    k = a.shape[-1]
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim < 2 or b.ndim < 2:
+        raise ValueError(f"operands must be at least 2D, got {a.shape} {b.shape}")
+    if a.ndim > 2 and b.ndim > 2:
+        batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+        a = jnp.broadcast_to(a, batch + a.shape[-2:])
+        b = jnp.broadcast_to(b, batch + b.shape[-2:])
+        n_batch = len(batch)
+    else:
+        n_batch = 0
+    contract, batch_dims, ka, kb, move_m = _contract_dnums(a.ndim, b.ndim, n_batch)
+    dnums = (contract, batch_dims)
 
+    def dot(x, y):
+        return jax.lax.dot_general(x, y, dnums, preferred_element_type=jnp.float32)
+
+    def finish(out_u32):
+        out = out_u32.astype(jnp.int32)
+        return jnp.moveaxis(out, 0, -2) if move_m else out
+
+    k = a.shape[ka]
     if k <= CHUNK_K:
         a_hi, a_lo = _limb_split(a.astype(jnp.float32))
         b_hi, b_lo = _limb_split(b.astype(jnp.float32))
-        return _limb_dot(a_hi, a_lo, b_hi, b_lo, p).astype(jnp.int32)
+        return finish(_limb_dot_u32(dot, a_hi, a_lo, b_hi, b_lo, p))
 
     pad = (-k) % CHUNK_K
     if pad:
-        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
-        b = jnp.pad(b, [(0, pad), (0, 0)])
+        wa = [(0, 0)] * a.ndim
+        wa[ka] = (0, pad)
+        wb = [(0, 0)] * b.ndim
+        wb[kb] = (0, pad)
+        a = jnp.pad(a, wa)
+        b = jnp.pad(b, wb)
         k += pad
     nchunk = k // CHUNK_K
 
     a_hi, a_lo = _limb_split(a.astype(jnp.float32))
     b_hi, b_lo = _limb_split(b.astype(jnp.float32))
 
-    out_shape = a.shape[:-1] + (b.shape[-1],)
-    acc0 = jnp.zeros(out_shape, jnp.float32)
+    def chunked(x, axis):
+        # Split the contraction axis into (nchunk, CHUNK_K) and move the
+        # chunk count to the front as the scan axis; the CHUNK_K slice
+        # stays at ``axis`` so the same dnums apply inside the scan.
+        x = x.reshape(x.shape[:axis] + (nchunk, CHUNK_K) + x.shape[axis + 1 :])
+        return jnp.moveaxis(x, axis, 0)
 
-    # Re-chunk the contraction dim to the scan axis: [nchunk, ..., CHUNK_K].
-    def chunked_lhs(x):
-        x = x.reshape(x.shape[:-1] + (nchunk, CHUNK_K))
-        return jnp.moveaxis(x, -2, 0)
+    xs = (
+        chunked(a_hi, ka),
+        chunked(a_lo, ka),
+        chunked(b_hi, kb),
+        chunked(b_lo, kb),
+    )
+    acc0 = jnp.zeros(jax.eval_shape(dot, a_hi, b_hi).shape, jnp.uint32)
 
-    ah_c, al_c = chunked_lhs(a_hi), chunked_lhs(a_lo)
-    bh_c = b_hi.reshape(nchunk, CHUNK_K, b.shape[-1])
-    bl_c = b_lo.reshape(nchunk, CHUNK_K, b.shape[-1])
+    def body(acc, limbs):
+        ah, al, bh, bl = limbs
+        return _limb_dot_u32(dot, ah, al, bh, bl, p, acc=acc), None
 
-    def body(acc, xs):
-        ah, al, bh, bl = xs
-        # Each dot accumulates <=256 products of values < 2**16: exact in f32.
-        chunkv = _limb_dot(ah, al, bh, bl, p)
-        return _mod_f32(acc + chunkv, pf), None
-
-    acc, _ = jax.lax.scan(body, acc0, (ah_c, al_c, bh_c, bl_c))
-    return acc.astype(jnp.int32)
+    acc, _ = jax.lax.scan(body, acc0, xs)
+    return finish(acc)
 
 
 @partial(jax.jit, static_argnames=("p",))

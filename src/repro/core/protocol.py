@@ -110,15 +110,15 @@ def share_a(plan: CMPCPlan, a: np.ndarray, rng: np.random.Generator) -> jnp.ndar
     """
     stack = _block_stack_a(plan, a)
     stack = _fill_secrets(plan, stack, plan.scheme.sa, plan.scheme.fa_powers, rng)
-    va = jnp.asarray(plan.va.astype(np.int32))
-    return polyeval(va, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+    dp = device_plan(plan)  # constants uploaded once per plan, not per call
+    return polyeval(dp.va, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
 
 
 def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
     stack = _block_stack_b(plan, b)
     stack = _fill_secrets(plan, stack, plan.scheme.sb, plan.scheme.fb_powers, rng)
-    vb = jnp.asarray(plan.vb.astype(np.int32))
-    return polyeval(vb, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+    dp = device_plan(plan)
+    return polyeval(dp.vb, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
 
 
 # ----------------------------------------------------------------------
@@ -149,24 +149,23 @@ def degree_reduce(
     """
     p = plan.field.p
     n = plan.n_workers
+    dp = device_plan(plan)
     if worker_ids is None:
         ids = np.arange(n)
-        mix = plan.mix
+        mix_t = dp.mix_t  # cached device constant
     else:
         ids = np.asarray(worker_ids)
-        mix = plan.phase2_matrix(ids)
+        mix_t = jnp.asarray((plan.phase2_matrix(ids).T % p).astype(np.int32))
     blk = h.shape[-2:]
     h_sel = h[jnp.asarray(ids)]
     h_flat = h_sel.reshape(n, -1)
-    i_flat = mod_matmul(
-        jnp.asarray((mix.T % p).astype(np.int32)), h_flat, p=p
-    )  # [n_total, blk]
+    i_flat = mod_matmul(mix_t, h_flat, p=p)  # [n_total, blk]
     # Workers' blinding terms R_w^{(n)}: each of the n Phase-2 workers
     # contributes z random matrices; only their sum enters I(x).
     r = plan.field.random(rng, (n, plan.scheme.z) + blk)
     r_sum = np.sum(r, axis=0) % p  # [z, blk]
     noise_flat = mod_matmul(
-        jnp.asarray((plan.vnoise % p).astype(np.int32)),
+        dp.vnoise,
         jnp.asarray(r_sum.reshape(plan.scheme.z, -1).astype(np.int32)),
         p=p,
     )
@@ -252,6 +251,8 @@ class DevicePlan:
     sa_pos: jnp.ndarray  # [z]   secret power -> row of the F_A stack
     b_pos: jnp.ndarray  # [s*t] block (k,l) -> row of the F_B coeff stack
     sb_pos: jnp.ndarray  # [z]
+    ids2: jnp.ndarray  # [n_workers] default Phase-2 worker set
+    ids3: jnp.ndarray  # [thr] default Phase-3 responder set
 
 
 def _positions(all_powers, powers) -> np.ndarray:
@@ -286,6 +287,8 @@ def device_plan(plan: CMPCPlan) -> DevicePlan:
         sa_pos=jnp.asarray(_positions(sch.fa_powers, sch.sa)),
         b_pos=jnp.asarray(b_pos),
         sb_pos=jnp.asarray(_positions(sch.fb_powers, sch.sb)),
+        ids2=jnp.arange(plan.n_workers, dtype=jnp.int32),
+        ids3=jnp.arange(plan.decode_threshold, dtype=jnp.int32),
     )
     object.__setattr__(plan, "_device_plan", dp)
     return dp
@@ -360,8 +363,12 @@ def _run_batched_jit(
     blk_flat = bra * bcb
     h_flat = jnp.take(h, ids2, axis=1).reshape(batch, n_workers, blk_flat)
     i_flat = mod_matmul(mix_t, h_flat, p=p, backend=backend)  # [batch, n_total, .]
-    r = random_field_device(k3, (batch, n_workers, z, blk_flat), p)
-    r_sum = (jnp.sum(r.astype(jnp.uint32), axis=1) % jnp.uint32(p)).astype(jnp.int32)
+    # Each Phase-2 worker contributes z blinding matrices R_w^{(n)}, but
+    # only their sum over workers enters I(x) — and a sum of i.i.d.
+    # uniforms mod p is itself uniform, so the dense single-host
+    # simulation draws the summed term directly (n_workers x less PRNG
+    # volume; the reference ``degree_reduce`` keeps per-worker draws).
+    r_sum = random_field_device(k3, (batch, z, blk_flat), p)
     noise = mod_matmul(vnoise, r_sum, p=p, backend=backend)  # [batch, n_total, .]
     i_evals = (
         (i_flat.astype(jnp.uint32) + noise.astype(jnp.uint32)) % jnp.uint32(p)
@@ -416,17 +423,17 @@ def run_batched(
     dp = device_plan(plan)
     p = plan.field.p
     if phase2_ids is None:
-        ids2 = np.arange(plan.n_workers)
+        ids2 = dp.ids2
         mix_t = dp.mix_t
     else:
-        ids2 = np.asarray(phase2_ids)
-        mix_t = jnp.asarray((plan.phase2_matrix(ids2).T % p).astype(np.int32))
+        ids2 = jnp.asarray(np.asarray(phase2_ids).astype(np.int32))
+        mix_t = jnp.asarray((plan.phase2_matrix(np.asarray(phase2_ids)).T % p).astype(np.int32))
     if phase3_ids is None:
-        ids3 = np.arange(plan.decode_threshold)
+        ids3 = dp.ids3
         decode_w = dp.decode_w
     else:
-        ids3 = np.asarray(phase3_ids)
-        decode_w = jnp.asarray((plan.decode_matrix(ids3) % p).astype(np.int32))
+        ids3 = jnp.asarray(np.asarray(phase3_ids).astype(np.int32))
+        decode_w = jnp.asarray((plan.decode_matrix(np.asarray(phase3_ids)) % p).astype(np.int32))
 
     y = _run_batched_jit(
         a,
@@ -441,8 +448,8 @@ def run_batched(
         dp.sa_pos,
         dp.b_pos,
         dp.sb_pos,
-        jnp.asarray(ids2.astype(np.int32)),
-        jnp.asarray(ids3.astype(np.int32)),
+        ids2,
+        ids3,
         p=p,
         s=plan.scheme.s,
         t=plan.scheme.t,

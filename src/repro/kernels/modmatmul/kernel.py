@@ -9,15 +9,27 @@ point* systolic array, so we re-think the arithmetic instead of porting:
 * limb products (< 2**16) are accumulated on the MXU in f32 — any
   partial sum of <= 256 such products stays below 2**24, the largest
   integer f32 represents exactly,
-* the inner (contraction) dimension is therefore tiled at ``bk = 256``
+* the inner (contraction) dimension is therefore tiled at ``bk <= 256``
   and a Barrett-free reduction (x - floor(x/p)*p, exact in f32 for
   x < 2**24) runs once per tile,
+* at ``bk <= LAZY_K`` (128) reductions are *lazy*: the two cross-limb
+  dots are summed raw before one reduction (2*128*255**2 < 2**24), and
+  the raw low-limb dot plus the running accumulator fold into the
+  final reduction (3*(p-1) + 128*255**2 < 2**24),
 * limb recombination multiplies by (2**16 mod p) and (2**8 mod p) so
   every intermediate stays < 2**24.
 
-Tiles are MXU-aligned (multiples of 128 on M/N).  The accumulator lives
-in the output VMEM block; the K grid axis is ``arbitrary`` (sequential)
-so accumulation is race-free.
+Batching: the protocol's worker/batch axis is a *grid* axis — one
+``pallas_call`` computes ``[B, M, K] @ [B, K, N]`` with grid
+``(B, M/bm, N/bn, K/bk)`` instead of a vmap of padded 2D launches.  An
+unbatched operand (e.g. a constant mixing or decode matrix against a
+batched stack) keeps its 2D shape and is indexed batch-invariantly, so
+it is never broadcast or copied per batch element.
+
+Tiles are MXU-aligned (M tiles are sublane multiples of 8, N/K tiles
+lane multiples of 128 — ``ops.pick_tiles`` chooses them from the actual
+operand shape).  The accumulator lives in the output VMEM block; the K
+grid axis is ``arbitrary`` (sequential) so accumulation is race-free.
 """
 from __future__ import annotations
 
@@ -28,7 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.gf import P_DEFAULT
+from ...core.gf import LAZY_K, P_DEFAULT
 
 # JAX renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams across
 # releases; resolve whichever this install provides.
@@ -57,38 +69,55 @@ def _mulmod_const(x, c: int, p: int):
     return _modf32(_modf32(x_hi * c_hi, pf) + _modf32(x_lo * c_lo, pf), pf)
 
 
-def _modmatmul_kernel(a_ref, b_ref, o_ref, *, p: int):
-    """One (bm, bn) output tile; K-axis accumulation across grid dim 2."""
+def _modmatmul_kernel(a_ref, b_ref, o_ref, *, p: int, lazy: bool, k_axis: int):
+    """One (bm, bn) output tile; K-axis accumulation across grid axis
+    ``k_axis``.  Batched refs carry a leading unit block axis that is
+    dropped before the MXU dots."""
     pf = float(p)
     f_hihi = (1 << 16) % p  # 2**16 mod p
     f_mid = (1 << 8) % p  # 2**8 mod p
 
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    af = a_ref[...].astype(jnp.float32)
-    bf = b_ref[...].astype(jnp.float32)
+    af = a_ref[...]
+    bf = b_ref[...]
+    if af.ndim == 3:  # batched block [1, bm, bk]
+        af = af[0]
+    if bf.ndim == 3:
+        bf = bf[0]
+    af = af.astype(jnp.float32)
+    bf = bf.astype(jnp.float32)
     a_hi = jnp.floor(af / LIMB)
     a_lo = af - a_hi * LIMB
     b_hi = jnp.floor(bf / LIMB)
     b_lo = bf - b_hi * LIMB
 
-    # Four MXU matmuls per tile; each single dot accumulates <= bk=256
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    # Four MXU matmuls per tile; each single dot accumulates <= bk<=256
     # products of 8-bit limbs -> partial sums < 2**24, exact in f32.
-    # The two cross dots are reduced separately before adding: their raw
-    # sum can reach ~2**25 and lose the low bit.
-    hh = _modf32(jnp.dot(a_hi, b_hi, preferred_element_type=jnp.float32), pf)
-    mid = _modf32(
-        _modf32(jnp.dot(a_hi, b_lo, preferred_element_type=jnp.float32), pf)
-        + _modf32(jnp.dot(a_lo, b_hi, preferred_element_type=jnp.float32), pf),
-        pf,
-    )
-    ll = _modf32(jnp.dot(a_lo, b_lo, preferred_element_type=jnp.float32), pf)
+    hh = _modf32(dot(a_hi, b_hi), pf)
+    if lazy:
+        # bk <= 128: the raw cross-dot sum stays < 2**24, so one
+        # reduction replaces three; the raw low-limb dot and the
+        # accumulator fold into the final reduction below.
+        mid = _modf32(dot(a_hi, b_lo) + dot(a_lo, b_hi), pf)
+        ll = dot(a_lo, b_lo)
+    else:
+        # bk up to 256: the raw cross sum can reach ~2**25 and lose the
+        # low bit — reduce each dot separately.
+        mid = _modf32(
+            _modf32(dot(a_hi, b_lo), pf) + _modf32(dot(a_lo, b_hi), pf), pf
+        )
+        ll = _modf32(dot(a_lo, b_lo), pf)
 
-    tile = _modf32(_mulmod_const(hh, f_hihi, p) + _mulmod_const(mid, f_mid, p) + ll, pf)
+    tile = _mulmod_const(hh, f_hihi, p) + _mulmod_const(mid, f_mid, p) + ll
+    if not lazy:
+        tile = _modf32(tile, pf)
     acc = o_ref[...].astype(jnp.float32)
-    o_ref[...] = _modf32(acc + tile, pf).astype(jnp.int32)
+    # lazy: acc + tile < 3*(p-1) + 128*255**2 < 2**24 — still exact.
+    o_ref[...] = _modf32(acc + tile.reshape(o_ref.shape), pf).astype(jnp.int32)
 
 
 @functools.partial(
@@ -103,29 +132,64 @@ def modmatmul_pallas(
     bk: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """a [M, K] @ b [K, N] mod p; int32 in [0, p). Shapes must be
-    multiples of the block sizes (ops.py handles padding)."""
+    """a [B, M, K] or [M, K]  @  b [B, K, N] or [K, N] mod p.
+
+    int32 in [0, p); M/N/K must be multiples of the block sizes
+    (ops.py handles padding and tile selection).  Always a *single*
+    ``pallas_call``: a batched operand puts B on the leading grid axis;
+    a 2D operand is shared across that axis via its index map (no
+    broadcast copies).  2D @ 2D keeps the classic 3-axis grid.
+    """
     if p >= 1 << 16:
         raise ValueError("kernel requires p < 2**16")
     if bk > 256:
         raise ValueError("bk must be <= 256 for exact f32 accumulation")
-    m, k = a.shape
-    k2, n = b.shape
+    a_batched = a.ndim == 3
+    b_batched = b.ndim == 3
+    m, k = a.shape[-2:]
+    k2, n = b.shape[-2:]
     assert k == k2, (a.shape, b.shape)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    batch = None
+    if a_batched or b_batched:
+        batch = a.shape[0] if a_batched else b.shape[0]
+        if a_batched and b_batched:
+            assert a.shape[0] == b.shape[0], (a.shape, b.shape)
 
-    grid = (m // bm, n // bn, k // bk)
+    lazy = bk <= LAZY_K
+    kernel = functools.partial(
+        _modmatmul_kernel,
+        p=p,
+        lazy=lazy,
+        k_axis=2 if batch is None else 3,
+    )
+    if batch is None:
+        grid = (m // bm, n // bn, k // bk)
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+        out_shape = (m, n)
+    else:
+        grid = (batch, m // bm, n // bn, k // bk)
+        if a_batched:
+            a_spec = pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk))
+        else:
+            a_spec = pl.BlockSpec((bm, bk), lambda bb, i, j, kk: (i, kk))
+        if b_batched:
+            b_spec = pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j))
+        else:
+            b_spec = pl.BlockSpec((bk, bn), lambda bb, i, j, kk: (kk, j))
+        o_spec = pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j))
+        out_shape = (batch, m, n)
+
     return pl.pallas_call(
-        functools.partial(_modmatmul_kernel, p=p),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.int32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel",) * (len(grid) - 1) + ("arbitrary",)
         ),
         interpret=interpret,
     )(a, b)

@@ -1,13 +1,24 @@
 """Jitted public wrapper around the GF(p) matmul kernel.
 
-Handles padding to tile multiples, batching (vmap over leading dims),
-and backend selection:
+Handles padding to tile multiples, batching, tile selection, and
+backend dispatch:
 
 * ``"pallas"``    — the Pallas TPU kernel (compiled on TPU, interpret
                      mode elsewhere; interpret executes the kernel body
-                     in Python for correctness validation on CPU),
-* ``"f32limb"``   — portable jnp path with identical limb math,
+                     in Python for correctness validation on CPU).
+                     Batched operands lower to ONE ``pallas_call`` with
+                     the batch on the leading grid axis — no
+                     vmap-of-padded-2D launches — and an unbatched
+                     operand is shared across the batch axis by its
+                     index map instead of being broadcast.
+* ``"f32limb"``   — portable jnp path with identical limb math (native
+                     ``dot_general`` batching, see ``core.gf``),
 * ``"auto"``      — pallas on TPU backends, f32limb otherwise.
+
+Tile sizes adapt to the operand shape (``pick_tiles``) unless pinned
+explicitly; at the protocol's small per-worker blocks the fixed
+128x128x256 tiling of earlier revisions spent most of the MXU work on
+padding.
 """
 from __future__ import annotations
 
@@ -20,6 +31,38 @@ from ...core.gf import P_DEFAULT, mod_matmul_f32
 from .kernel import modmatmul_pallas
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def pick_tiles(m: int, k: int, n: int) -> tuple:
+    """Choose (bm, bn, bk) from the actual operand shape.
+
+    Alignment floors come from the TPU layout: sublane (second-to-minor)
+    tiles are multiples of 8, lane (minor) tiles multiples of 128.
+    Small dims get a single right-sized tile instead of padding up to
+    the historical 128/128/256; ``bk <= LAZY_K`` (k <= 128) additionally
+    enables the kernel's lazy-reduction path.  Caps keep the worst-case
+    VMEM block footprint (a + b + out) around 1 MiB.
+    """
+    bm = _round_up(m, 8) if m <= 256 else 128
+    bn = _round_up(n, 128) if n <= 512 else 128
+    bk = 128 if k <= 128 else 256
+    return bm, bn, bk
+
+
+def padded_shape(m: int, k: int, n: int, tiles: tuple) -> tuple:
+    """(M, K, N) after padding each dim up to its tile multiple."""
+    bm, bn, bk = tiles
+    return _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+
+def padding_waste(m: int, k: int, n: int, tiles: tuple) -> float:
+    """Fraction of MXU MACs spent on padding for one [M,K]@[K,N] product."""
+    mp, kp, np_ = padded_shape(m, k, n, tiles)
+    return 1.0 - (m * k * n) / float(mp * kp * np_)
+
+
 def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
     p0 = (-x.shape[-2]) % mult0
     p1 = (-x.shape[-1]) % mult1
@@ -27,6 +70,20 @@ def _pad_to(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
         pad = [(0, 0)] * (x.ndim - 2) + [(0, p0), (0, p1)]
         x = jnp.pad(x, pad)
     return x
+
+
+def _flatten_batch(x: jnp.ndarray, batch: tuple) -> jnp.ndarray:
+    """Collapse leading batch dims to one axis; an operand whose batch
+    dims are absent or all 1 stays 2D (shared across the kernel's batch
+    grid axis — never materialized per element)."""
+    nbatch = 1
+    for d in x.shape[:-2]:
+        nbatch *= d
+    if nbatch == 1:
+        return x.reshape(x.shape[-2:])
+    if x.shape[:-2] != batch:
+        x = jnp.broadcast_to(x, batch + x.shape[-2:])
+    return x.reshape((-1,) + x.shape[-2:])
 
 
 @functools.partial(
@@ -37,30 +94,23 @@ def mod_matmul(
     b: jnp.ndarray,
     p: int = P_DEFAULT,
     backend: str = "auto",
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 256,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """a [..., M, K] @ b [..., K, N] mod p (int32), batched over leading dims.
 
     Batch dims of ``a`` and ``b`` must broadcast against each other; one
     side may omit them entirely (e.g. a 2D constant matrix against a
-    batched operand) — the unbatched side is broadcast before vmapping.
+    batched operand) — the unbatched side is contracted in place, never
+    broadcast.  Tile sizes default to ``pick_tiles`` of the actual shape.
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "f32limb"
 
     if backend == "f32limb":
-        if b.ndim == 2:
-            # mod_matmul_f32 natively supports [..., M, K] @ [K, N].
-            return mod_matmul_f32(a, b, p)
-        # batched rhs: broadcast the unbatched side, vmap the portable path
-        batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
-        af = jnp.broadcast_to(a, batch + a.shape[-2:]).reshape((-1,) + a.shape[-2:])
-        bf = jnp.broadcast_to(b, batch + b.shape[-2:]).reshape((-1,) + b.shape[-2:])
-        out = jax.vmap(lambda x, y: mod_matmul_f32(x, y, p))(af, bf)
-        return out.reshape(batch + out.shape[-2:])
+        return mod_matmul_f32(a, b, p)
 
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend}")
@@ -70,6 +120,10 @@ def mod_matmul(
 
     m, k = a.shape[-2:]
     n = b.shape[-1]
+    tm, tn, tk = pick_tiles(m, k, n)
+    bm = bm or tm
+    bn = bn or tn
+    bk = bk or tk
     ap = _pad_to(a, bm, bk)
     bp = _pad_to(b, bk, bn)
 
@@ -80,9 +134,8 @@ def mod_matmul(
         out = call(ap, bp)
     else:
         batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
-        af = jnp.broadcast_to(ap, batch + ap.shape[-2:]).reshape((-1,) + ap.shape[-2:])
-        bf = jnp.broadcast_to(bp, batch + bp.shape[-2:]).reshape((-1,) + bp.shape[-2:])
-        out = jax.vmap(call)(af, bf).reshape(batch + (ap.shape[-2], bp.shape[-1]))
+        out = call(_flatten_batch(ap, batch), _flatten_batch(bp, batch))
+        out = out.reshape(batch + (ap.shape[-2], bp.shape[-1]))
     return out[..., :m, :n]
 
 
