@@ -3,7 +3,7 @@
 
 PYTHON ?= python
 
-.PHONY: test test-fast bench bench-json quickstart
+.PHONY: test test-fast bench bench-json bench-edge quickstart
 
 test:
 	$(PYTHON) -m pytest -q
@@ -18,6 +18,11 @@ bench:
 # repo root so later PRs can track regressions.
 bench-json:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.protocol_batch
+
+# PolyDot vs AGE over identical edge worker-pool traces; refreshes
+# BENCH_edge.json at the repo root.
+bench-edge:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.edge_runtime
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -9,6 +9,11 @@ from typing import Callable, Dict, List
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
 
+def repo_root() -> str:
+    """Repo root (where the committed BENCH_*.json snapshots live)."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
 def timeit(fn: Callable, repeat: int = 5, warmup: int = 1) -> float:
     """Median wall time per call in microseconds."""
     for _ in range(warmup):

@@ -38,7 +38,7 @@ from repro.core.gf import Field
 from repro.core.planner import BlockShapes, get_plan
 from repro.kernels.modmatmul.ops import padding_waste, pick_tiles
 
-from .common import timeit, write_csv
+from .common import repo_root, timeit, write_csv
 
 BATCHES = (1, 8, 16, 32)
 
@@ -53,10 +53,6 @@ PR1_BASELINE_US = {1: 6995.5, 8: 3285.1, 16: 3033.8, 32: 3851.4}
 FIXED_TILES = (128, 128, 256)  # the legacy hardcoded tiling
 
 JSON_NAME = "BENCH_protocol.json"
-
-
-def _repo_root() -> str:
-    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _phase_times(plan, a, b) -> dict:
@@ -176,7 +172,7 @@ def run():
         "phases_us": _phase_times(plan, a1, b1),
         "padding_waste": _padding_report(plan),
     }
-    json_path = os.path.join(_repo_root(), JSON_NAME)
+    json_path = os.path.join(repo_root(), JSON_NAME)
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

@@ -17,6 +17,7 @@ def main() -> None:
 
     from . import (
         cmpc_comm,
+        edge_runtime,
         example1,
         fig2,
         fig3,
@@ -34,6 +35,7 @@ def main() -> None:
         "protocol_scaling": protocol_scaling,
         "protocol_batch": protocol_batch,
         "cmpc_comm": cmpc_comm,
+        "edge_runtime": edge_runtime,
         "roofline": roofline,
     }
     if args.only:

@@ -167,6 +167,11 @@ def age_cmpc(
 # ----------------------------------------------------------------------
 # registry
 # ----------------------------------------------------------------------
+# Canonical method names (one per construction family) — the iterable
+# surface for scheme-comparison harnesses like benchmarks/edge_runtime.
+KNOWN_METHODS = ("polydot", "age", "age-paper", "entangled-greedy")
+
+
 def build_scheme(method: str, s: int, t: int, z: int, lam: Optional[int] = None) -> Scheme:
     method = method.lower()
     if method in ("polydot", "polydot-cmpc"):
@@ -177,4 +182,4 @@ def build_scheme(method: str, s: int, t: int, z: int, lam: Optional[int] = None)
         return age_cmpc(s, t, z, lam=lam, exact_search=False)
     if method in ("entangled-greedy",):
         return age_cmpc_fixed(s, t, z, 0)
-    raise KeyError(f"unknown CMPC method: {method}")
+    raise KeyError(f"unknown CMPC method: {method} (known: {KNOWN_METHODS})")

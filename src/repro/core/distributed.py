@@ -60,12 +60,19 @@ def run_phase2_sharded(
     mode: str = "all_to_all",
     matmul_backend: str = "auto",
     return_compiled: bool = False,
+    worker_ids: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Workers compute H and run the G-exchange on a device mesh.
 
     fa: [n_total, br, bk] shares, fb: [n_total, bk, bc]; noise:
     [n_workers, z, br, bc] per-worker blinding matrices R_w^{(n)}.
     Returns I(alpha_n) for all (unpadded) provisioned workers.
+
+    ``worker_ids`` selects which ``n_workers`` of the provisioned pool
+    serve as Phase-2 senders (straggler mitigation — e.g. the fastest
+    subset picked by ``repro.runtime``); ``noise`` rows follow the same
+    order.  Non-senders are receive-only (zero mix rows), matching the
+    pad workers.  Default is the primary prefix.
 
     ``matmul_backend`` threads through to the kernel layer
     (``auto``/``pallas``/``f32limb``): the per-shard worker multiply is
@@ -77,17 +84,24 @@ def run_phase2_sharded(
     n_total = plan.n_total
     assert n_total * max(1, plan.n_workers) < (1 << 31) // p, "int32 reduction bound"
 
+    if worker_ids is None:
+        ids = np.arange(plan.n_workers)
+        mix = plan.mix
+    else:
+        ids = np.asarray(worker_ids)
+        mix = plan.phase2_matrix_cached(ids)
+
     # Pad worker-stacked operands to the axis size; pad workers are
     # receive-only (zero mix rows / zero noise).
     fa_p = _pad_to_multiple(np.asarray(fa), d)
     fb_p = _pad_to_multiple(np.asarray(fb), d)
     npad = fa_p.shape[0]
     mix_rows = np.zeros((npad, npad), np.int64)
-    mix_rows[: plan.n_workers, :n_total] = plan.mix  # [senders, receivers]
+    mix_rows[ids, :n_total] = mix  # [senders, receivers]
     vnz = np.zeros((npad, plan.scheme.z), np.int64)
     vnz[:n_total] = plan.vnoise
     noise_p = np.zeros((npad,) + noise.shape[1:], np.int64)
-    noise_p[: plan.n_workers] = noise
+    noise_p[ids] = noise
 
     mix_j = jnp.asarray(mix_rows.astype(np.int32))
     vn_j = jnp.asarray(vnz.astype(np.int32))

@@ -57,6 +57,11 @@ class Field:
         if self.p < 3:
             raise ValueError("p must be an odd prime")
 
+    @property
+    def elem_bytes(self) -> int:
+        """Wire width of one field element (bytes-level Trace views)."""
+        return (self.p.bit_length() + 7) // 8
+
     # ------------------------------------------------------------------
     # host (numpy int64) reference arithmetic
     # ------------------------------------------------------------------

@@ -109,6 +109,48 @@ class CMPCPlan:
         v = self.field.vandermonde(self.alphas[ids], range(self.decode_threshold))
         return self.field.inv_matrix(v)
 
+    # ------------------------------------------------------------------
+    # per-subset matrix caches (straggler-aware runtime hot path)
+    # ------------------------------------------------------------------
+    # The edge runtime decodes from whatever responder subset happens to
+    # be fastest, and under a stationary latency distribution the same
+    # few subsets recur run after run.  Both subset matrices cost a
+    # Gauss-Jordan inversion mod p in Python, so they get the same
+    # treatment as ``get_plan``: a bounded insertion-ordered cache, here
+    # per plan (keyed by the frozen id tuple) since the matrices are
+    # meaningless across plans.  The primary prefix bypasses the cache
+    # entirely — it is already stored on the plan.
+
+    def phase2_matrix_cached(self, worker_ids: Sequence[int]) -> np.ndarray:
+        ids = np.asarray(worker_ids)
+        if ids.size == self.n_workers and np.array_equal(ids, np.arange(self.n_workers)):
+            return self.mix
+        return self._subset_cached("mix", ids, self.phase2_matrix)
+
+    def decode_matrix_cached(self, worker_ids: Sequence[int]) -> np.ndarray:
+        ids = np.asarray(worker_ids)
+        thr = self.decode_threshold
+        if ids.size == thr and np.array_equal(ids, np.arange(thr)):
+            return self.decode_w
+        return self._subset_cached("dec", ids, self.decode_matrix)
+
+    def _subset_cached(self, kind: str, ids: np.ndarray, build) -> np.ndarray:
+        cache = self.__dict__.get("_subset_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_subset_cache", cache)
+        key = (kind, tuple(int(i) for i in ids))
+        hit = cache.get(key)
+        if hit is not None:
+            _SUBSET_CACHE_STATS["hits"] += 1
+            return hit
+        _SUBSET_CACHE_STATS["misses"] += 1
+        mat = build(ids)
+        cache[key] = mat
+        while len(cache) > _SUBSET_CACHE_MAX:
+            cache.pop(next(iter(cache)))
+        return mat
+
 
 def _phase2_matrix(
     scheme: Scheme, field: Field, alphas: np.ndarray, ids: np.ndarray
@@ -145,6 +187,12 @@ def _phase2_matrix(
 # batched pipeline — reuse the mixing/decode constants.
 _PLAN_CACHE: dict = {}
 _PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+# Per-plan subset-matrix caches (phase2_matrix_cached /
+# decode_matrix_cached) share process-wide hit counters and a per-plan
+# size bound; a runtime facing a pool of n_total workers sees at most
+# C(n_total, threshold) distinct subsets but in practice a handful.
+_SUBSET_CACHE_STATS = {"hits": 0, "misses": 0}
+_SUBSET_CACHE_MAX = 512
 # Plans pin O(n_total^2) host matrices (plus device constants once the
 # batched engine touches them), and callers key on runtime batch sizes,
 # so bound the cache: oldest-inserted entries are evicted first.
@@ -196,6 +244,15 @@ def plan_cache_info() -> dict:
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
     _PLAN_CACHE_STATS.update(hits=0, misses=0)
+
+
+def subset_cache_info() -> dict:
+    """Process-wide {'hits', 'misses'} of the per-plan subset caches."""
+    return dict(_SUBSET_CACHE_STATS)
+
+
+def subset_cache_clear() -> None:
+    _SUBSET_CACHE_STATS.update(hits=0, misses=0)
 
 
 def make_plan(

@@ -51,11 +51,19 @@ from .planner import BlockShapes, CMPCPlan
 
 @dataclasses.dataclass
 class Trace:
-    """Scalar-movement accounting (field elements, not bytes)."""
+    """Scalar-movement accounting, in field elements.
+
+    Phase-1 counts cover every *provisioned* worker (primaries and
+    spares alike — spares receive shares up front so they can step in),
+    matching Corollary 12's accounting at N = n_total.  ``elem_bytes``
+    (the field's wire width, ``Field.elem_bytes``) converts the element
+    counts into the bytes-level view used by the runtime metrics.
+    """
 
     phase1_source_to_worker: int = 0
     phase2_worker_to_worker: int = 0
     phase3_worker_to_master: int = 0
+    elem_bytes: int = 2  # width of one GF(p) element on the wire
 
     @property
     def total(self) -> int:
@@ -65,60 +73,87 @@ class Trace:
             + self.phase3_worker_to_master
         )
 
+    @property
+    def phase1_bytes(self) -> int:
+        return self.phase1_source_to_worker * self.elem_bytes
 
-def _block_stack_a(plan: CMPCPlan, a: np.ndarray) -> np.ndarray:
-    """Coefficient stack of C_A: blocks of A^T laid out on fa_powers."""
-    sh = plan.shapes
-    at = np.asarray(a).T  # [ma, k]
-    br, bc = sh.blk_a
-    amap = plan.scheme.coded.a_power_map()
-    pos = {u: idx for idx, u in enumerate(plan.scheme.fa_powers)}
-    stack = np.zeros((len(plan.scheme.fa_powers), br, bc), np.int64)
-    for (i, j), u in amap.items():
-        stack[pos[u]] = at[i * br : (i + 1) * br, j * bc : (j + 1) * bc]
-    return stack
+    @property
+    def phase2_bytes(self) -> int:
+        return self.phase2_worker_to_worker * self.elem_bytes
 
+    @property
+    def phase3_bytes(self) -> int:
+        return self.phase3_worker_to_master * self.elem_bytes
 
-def _block_stack_b(plan: CMPCPlan, b: np.ndarray) -> np.ndarray:
-    sh = plan.shapes
-    b = np.asarray(b)
-    br, bc = sh.blk_b
-    bmap = plan.scheme.coded.b_power_map()
-    pos = {u: idx for idx, u in enumerate(plan.scheme.fb_powers)}
-    stack = np.zeros((len(plan.scheme.fb_powers), br, bc), np.int64)
-    for (k, l), u in bmap.items():
-        stack[pos[u]] = b[k * br : (k + 1) * br, l * bc : (l + 1) * bc]
-    return stack
-
-
-def _fill_secrets(
-    plan: CMPCPlan, stack: np.ndarray, secret_powers, all_powers, rng: np.random.Generator
-) -> np.ndarray:
-    pos = {u: idx for idx, u in enumerate(all_powers)}
-    for u in secret_powers:
-        stack[pos[u]] = plan.field.random(rng, stack.shape[1:])
-    return stack
+    @property
+    def total_bytes(self) -> int:
+        return self.total * self.elem_bytes
 
 
 # ----------------------------------------------------------------------
 # Phase 1 — sources share data with workers
 # ----------------------------------------------------------------------
+# The coefficient stacks are built directly in int32 with one reshape /
+# transpose block scatter (the host mirror of ``_run_batched_jit``'s
+# index-based scatter) and ONE bulk int32 PRNG draw for all z secret
+# coefficients — replacing the per-block dict loop, the per-power int64
+# draws, and the int64 -> int32 conversion pass over the whole stack
+# that used to dominate the ``run()`` share path on CPU.
+
+
+def _share_stack(
+    blocks: np.ndarray,
+    n_coeff: int,
+    data_pos: np.ndarray,
+    secret_pos: np.ndarray,
+    p: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Scatter data blocks + fresh secrets into an int32 coeff stack."""
+    stack = np.zeros((n_coeff,) + blocks.shape[1:], np.int32)
+    stack[data_pos] = blocks
+    stack[secret_pos] = rng.integers(
+        0, p, size=(secret_pos.size,) + blocks.shape[1:], dtype=np.int32
+    )
+    return stack
+
+
 def share_a(plan: CMPCPlan, a: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
     """Source 1: F_A(alpha_n) for every provisioned worker.
 
     Returns int32 [n_total, ma/t, k/s].
     """
-    stack = _block_stack_a(plan, a)
-    stack = _fill_secrets(plan, stack, plan.scheme.sa, plan.scheme.fa_powers, rng)
+    sh = plan.shapes
+    s, t = plan.scheme.s, plan.scheme.t
+    br, bc = sh.blk_a
     dp = device_plan(plan)  # constants uploaded once per plan, not per call
-    return polyeval(dp.va, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+    at = np.ascontiguousarray(np.asarray(a, np.int64).T)  # [ma, k]
+    blocks = (
+        at.reshape(t, br, s, bc).transpose(0, 2, 1, 3).reshape(t * s, br, bc)
+    ).astype(np.int32)
+    stack = _share_stack(
+        blocks, len(plan.scheme.fa_powers), dp.a_pos_h, dp.sa_pos_h,
+        plan.field.p, rng,
+    )
+    # the numpy stack goes straight into the jitted kernel: an eager
+    # jnp.asarray here costs more than the kernel's own conversion
+    return polyeval(dp.va, stack, p=plan.field.p)
 
 
 def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
-    stack = _block_stack_b(plan, b)
-    stack = _fill_secrets(plan, stack, plan.scheme.sb, plan.scheme.fb_powers, rng)
+    sh = plan.shapes
+    s, t = plan.scheme.s, plan.scheme.t
+    br, bc = sh.blk_b
     dp = device_plan(plan)
-    return polyeval(dp.vb, jnp.asarray(stack.astype(np.int32)), p=plan.field.p)
+    bm = np.asarray(b, np.int64)
+    blocks = (
+        bm.reshape(s, br, t, bc).transpose(0, 2, 1, 3).reshape(s * t, br, bc)
+    ).astype(np.int32)
+    stack = _share_stack(
+        blocks, len(plan.scheme.fb_powers), dp.b_pos_h, dp.sb_pos_h,
+        plan.field.p, rng,
+    )
+    return polyeval(dp.vb, stack, p=plan.field.p)
 
 
 # ----------------------------------------------------------------------
@@ -150,12 +185,7 @@ def degree_reduce(
     p = plan.field.p
     n = plan.n_workers
     dp = device_plan(plan)
-    if worker_ids is None:
-        ids = np.arange(n)
-        mix_t = dp.mix_t  # cached device constant
-    else:
-        ids = np.asarray(worker_ids)
-        mix_t = jnp.asarray((plan.phase2_matrix(ids).T % p).astype(np.int32))
+    ids, mix_t = _phase2_selection(plan, worker_ids)
     blk = h.shape[-2:]
     h_sel = h[jnp.asarray(ids)]
     h_flat = h_sel.reshape(n, -1)
@@ -174,6 +204,47 @@ def degree_reduce(
 
 
 # ----------------------------------------------------------------------
+# worker-subset selection (shared by run / run_batched / the runtime)
+# ----------------------------------------------------------------------
+def _phase2_selection(
+    plan: CMPCPlan, worker_ids: Optional[Sequence[int]]
+) -> Tuple[np.ndarray, jnp.ndarray]:
+    """(sender ids, device mix.T) for a Phase-2 worker subset.
+
+    ``None`` is the primary-prefix fast path: the pre-transposed device
+    constant from ``device_plan``.  Any explicit subset routes through
+    the plan's cached subset matrices.
+    """
+    if worker_ids is None:
+        return np.arange(plan.n_workers), device_plan(plan).mix_t
+    ids = np.asarray(worker_ids)
+    mix = plan.phase2_matrix_cached(ids)
+    return ids, jnp.asarray((mix.T % plan.field.p).astype(np.int32))
+
+
+def _decode_selection(
+    plan: CMPCPlan, worker_ids: Optional[Sequence[int]]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(responder ids, decode matrix) for a Phase-3 responder subset."""
+    if worker_ids is None:
+        return np.arange(plan.decode_threshold), plan.decode_w
+    ids = np.asarray(worker_ids)
+    return ids, plan.decode_matrix_cached(ids)
+
+
+def assemble_y(plan: CMPCPlan, coeffs: np.ndarray) -> np.ndarray:
+    """Lay the first t^2 coefficients of I(x) out as Y (eq. 21).
+
+    coeffs: [>= t^2, blk_flat]; coefficient g = i + t*l is output block
+    (row i, col l).  Vectorized transpose — no per-block Python loop.
+    """
+    t = plan.scheme.t
+    br, bc = plan.shapes.blk_y
+    blocks = np.asarray(coeffs)[: t * t].reshape(t, t, br, bc)  # [l, i, ., .]
+    return blocks.transpose(1, 2, 0, 3).reshape(plan.shapes.ma, plan.shapes.mb)
+
+
+# ----------------------------------------------------------------------
 # Phase 3 — master reconstructs Y = A^T B
 # ----------------------------------------------------------------------
 def reconstruct(
@@ -181,24 +252,17 @@ def reconstruct(
     i_evals: jnp.ndarray,
     worker_ids: Optional[Sequence[int]] = None,
 ) -> np.ndarray:
-    """Interpolate I(x) from t^2 + z responses and assemble Y."""
+    """Interpolate I(x) from t^2 + z responses and assemble Y.
+
+    ``worker_ids`` is the responder subset (any ``decode_threshold``
+    indices into the provisioned pool); the default is the primary
+    prefix, whose decode matrix is precomputed on the plan.
+    """
     thr = plan.decode_threshold
-    if worker_ids is None:
-        ids = np.arange(thr)
-        w = plan.decode_w
-    else:
-        ids = np.asarray(worker_ids)
-        w = plan.decode_matrix(ids)
+    ids, w = _decode_selection(plan, worker_ids)
     sel = np.asarray(i_evals)[ids].reshape(thr, -1)
     coeffs = plan.field.matmul(w, sel)  # [thr, blk_flat]
-    t = plan.scheme.t
-    br, bc = plan.shapes.blk_y
-    y = np.zeros((plan.shapes.ma, plan.shapes.mb), np.int64)
-    for i in range(t):
-        for l in range(t):
-            blkc = coeffs[i + t * l].reshape(br, bc)
-            y[i * br : (i + 1) * br, l * bc : (l + 1) * bc] = blkc
-    return y
+    return assemble_y(plan, coeffs)
 
 
 def reconstruct_coded_only(
@@ -253,6 +317,11 @@ class DevicePlan:
     sb_pos: jnp.ndarray  # [z]
     ids2: jnp.ndarray  # [n_workers] default Phase-2 worker set
     ids3: jnp.ndarray  # [thr] default Phase-3 responder set
+    # host copies of the scatter maps for the numpy share path of ``run``
+    a_pos_h: np.ndarray = None
+    sa_pos_h: np.ndarray = None
+    b_pos_h: np.ndarray = None
+    sb_pos_h: np.ndarray = None
 
 
 def _positions(all_powers, powers) -> np.ndarray:
@@ -289,6 +358,10 @@ def device_plan(plan: CMPCPlan) -> DevicePlan:
         sb_pos=jnp.asarray(_positions(sch.fb_powers, sch.sb)),
         ids2=jnp.arange(plan.n_workers, dtype=jnp.int32),
         ids3=jnp.arange(plan.decode_threshold, dtype=jnp.int32),
+        a_pos_h=a_pos,
+        sa_pos_h=_positions(sch.fa_powers, sch.sa),
+        b_pos_h=b_pos,
+        sb_pos_h=_positions(sch.fb_powers, sch.sb),
     )
     object.__setattr__(plan, "_device_plan", dp)
     return dp
@@ -426,14 +499,15 @@ def run_batched(
         ids2 = dp.ids2
         mix_t = dp.mix_t
     else:
-        ids2 = jnp.asarray(np.asarray(phase2_ids).astype(np.int32))
-        mix_t = jnp.asarray((plan.phase2_matrix(np.asarray(phase2_ids)).T % p).astype(np.int32))
+        ids2_h, mix_t = _phase2_selection(plan, phase2_ids)
+        ids2 = jnp.asarray(ids2_h.astype(np.int32))
     if phase3_ids is None:
         ids3 = dp.ids3
         decode_w = dp.decode_w
     else:
-        ids3 = jnp.asarray(np.asarray(phase3_ids).astype(np.int32))
-        decode_w = jnp.asarray((plan.decode_matrix(np.asarray(phase3_ids)) % p).astype(np.int32))
+        ids3_h, decode_w_h = _decode_selection(plan, phase3_ids)
+        ids3 = jnp.asarray(ids3_h.astype(np.int32))
+        decode_w = jnp.asarray((decode_w_h % p).astype(np.int32))
 
     y = _run_batched_jit(
         a,
@@ -473,6 +547,7 @@ def run_batched(
         * plan.decode_threshold
         * (sh.ma // t)
         * (sh.mb // t),
+        elem_bytes=plan.field.elem_bytes,
     )
     return np.asarray(y, np.int64), trace
 
@@ -504,5 +579,6 @@ def run(
         * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
         phase2_worker_to_worker=n * (n - 1) * (sh.ma // t) * (sh.mb // t),
         phase3_worker_to_master=plan.decode_threshold * (sh.ma // t) * (sh.mb // t),
+        elem_bytes=plan.field.elem_bytes,
     )
     return y, trace

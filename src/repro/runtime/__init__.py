@@ -1,0 +1,34 @@
+"""Edge worker-pool runtime: straggler-aware protocol execution.
+
+The plan layer (``repro.core.planner``) already supports arbitrary
+worker subsets — ``n_spare`` extra evaluation points, ``phase2_matrix``
+and ``decode_matrix`` for any surviving set — but the core execution
+paths assume every worker answers instantly.  This package turns that
+static machinery into an execution engine for the paper's actual
+setting: heterogeneous, flaky edge workers.
+
+* ``pool``      — latency models (deterministic / shifted-exponential /
+                   heavy-tail) and fault injection (stragglers,
+                   dropouts, crash-after-phase-2, corrupted responses),
+                   sampled into replayable per-worker traces,
+* ``scheduler`` — the event loop: dispatch shares, pick the fastest
+                   ``n_workers`` for Phase 2, decode from the fastest
+                   ``decode_threshold`` responders (with consistency
+                   verification against extra responders when corruption
+                   is possible),
+* ``metrics``   — per-run timeline, communication (bytes-level
+                   ``Trace`` view), effective worker counts and
+                   decode-subset statistics, plus aggregation across
+                   runs.
+"""
+from .pool import (  # noqa: F401
+    Deterministic,
+    FaultSpec,
+    HeavyTail,
+    LatencyModel,
+    ShiftedExponential,
+    WorkerTrace,
+    sample_trace,
+)
+from .scheduler import DecodeFailure, EdgeRun, run_over_pool  # noqa: F401
+from .metrics import RunMetrics, summarize  # noqa: F401

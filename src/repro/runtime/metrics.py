@@ -1,0 +1,83 @@
+"""Per-run runtime metrics and cross-run aggregation.
+
+``RunMetrics`` records the timeline of one event-driven execution
+(when each protocol phase unblocked), the communication trace (with the
+bytes-level view from ``protocol.Trace``), which workers actually
+served each phase, and what the master rejected as corrupt.  These are
+the quantities behind the paper's edge claims: completion time under
+stragglers, and how many provisioned workers were actually needed.
+
+``summarize`` aggregates a list of runs into the latency distribution
+(mean / p50 / p95 / max), mean effective worker count, decode-subset
+statistics (how many distinct responder subsets the master decoded
+from — the hit pattern of the planner's subset-matrix caches), and
+total wire bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core.protocol import Trace
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    """Timeline + accounting of one run over a worker pool."""
+
+    completion_time: float  # master accepts the decode
+    phase1_last_share: float  # last share delivered to a live worker
+    phase2_set_time: float  # fastest n_workers finished H -> set fixed
+    first_response: float  # first I(alpha_n) at the master
+    n_provisioned: int
+    n_dropped: int
+    n_crashed: int
+    phase2_ids: np.ndarray  # the fastest-subset Phase-2 senders
+    responder_ids: np.ndarray  # accepted Phase-3 decode subset
+    confirmed_by: np.ndarray  # extra responders that verified the decode
+    rejected_ids: np.ndarray  # responders detected as corrupt
+    trace: Trace  # communication (elements + bytes views)
+
+    @property
+    def effective_workers(self) -> int:
+        """Distinct workers whose output the result depends on."""
+        return int(
+            np.union1d(np.union1d(self.phase2_ids, self.responder_ids),
+                       self.confirmed_by).size
+        )
+
+    @property
+    def decode_subset_key(self) -> Tuple[int, ...]:
+        return tuple(int(i) for i in np.sort(self.responder_ids))
+
+
+def summarize(runs: List[RunMetrics]) -> Dict:
+    """Aggregate a list of runs into distribution-level statistics."""
+    if not runs:
+        return {"runs": 0}
+    times = np.array([r.completion_time for r in runs])
+    subsets: Dict[Tuple[int, ...], int] = {}
+    for r in runs:
+        k = r.decode_subset_key
+        subsets[k] = subsets.get(k, 0) + 1
+    top = sorted(subsets.items(), key=lambda kv: -kv[1])[:3]
+    return {
+        "runs": len(runs),
+        "completion_mean": float(times.mean()),
+        "completion_p50": float(np.percentile(times, 50)),
+        "completion_p95": float(np.percentile(times, 95)),
+        "completion_max": float(times.max()),
+        "effective_workers_mean": float(
+            np.mean([r.effective_workers for r in runs])
+        ),
+        "n_provisioned": runs[0].n_provisioned,
+        "dropped_mean": float(np.mean([r.n_dropped for r in runs])),
+        "rejected_total": int(sum(r.rejected_ids.size for r in runs)),
+        "decode_subsets_distinct": len(subsets),
+        "decode_subsets_top": [
+            {"subset": list(k), "count": c} for k, c in top
+        ],
+        "wire_bytes_mean": float(np.mean([r.trace.total_bytes for r in runs])),
+    }

@@ -1,0 +1,195 @@
+"""Simulated edge worker pool: latency models and fault injection.
+
+A ``WorkerTrace`` is the *replayable* per-worker behaviour of one
+protocol execution: message and compute delays plus fault flags, all
+sampled up front from a seeded generator.  Sampling is separated from
+scheduling so the same trace can be replayed against different schemes
+— the scheme-comparison benchmark samples one trace at the largest
+provisioned pool size and hands each scheme a prefix (``take``), so
+PolyDot-CMPC and AGE-CMPC face byte-identical worker behaviour.
+
+Latency models (per-worker, independent):
+
+* ``Deterministic``        — constant; the all-fast baseline and the
+                              unit-test fixture (schedule fully known),
+* ``ShiftedExponential``   — shift + Exp(scale): the standard
+                              straggler model of the coded-computation
+                              literature,
+* ``HeavyTail``            — shift + scale * Pareto(alpha): rare but
+                              extreme stragglers (alpha <= 2 has
+                              infinite variance).
+
+Fault injection (``FaultSpec`` for Bernoulli sampling, or the explicit
+``with_faults`` placement used when a test/benchmark needs exact
+counts, e.g. "dropouts up to n_spare"):
+
+* straggler          — compute slowed by ``straggler_slowdown``,
+* dropout            — never computes or responds (lost share / dead),
+* crash-after-phase-2 — serves the Phase-2 exchange, then crashes
+                        before reporting I(alpha_n) to the master,
+* corrupt            — responds on time with garbage (detected by the
+                        scheduler via decode-consistency checks).
+
+Fault flags are made disjoint with priority dropout > crash > corrupt
+(a dropped worker cannot also crash later).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# latency models
+# ----------------------------------------------------------------------
+class LatencyModel:
+    """Per-worker delay distribution; ``sample`` returns seconds > 0."""
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Deterministic(LatencyModel):
+    value: float = 1.0
+
+    def sample(self, rng, n):
+        rng.random(n)  # consume the stream so fault draws stay aligned
+        return np.full(n, float(self.value))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExponential(LatencyModel):
+    shift: float = 1.0
+    scale: float = 1.0
+
+    def sample(self, rng, n):
+        return self.shift + rng.exponential(self.scale, size=n)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeavyTail(LatencyModel):
+    shift: float = 1.0
+    scale: float = 0.5
+    alpha: float = 1.5
+
+    def sample(self, rng, n):
+        return self.shift + self.scale * rng.pareto(self.alpha, size=n)
+
+
+# ----------------------------------------------------------------------
+# fault injection
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Bernoulli fault probabilities, applied per worker."""
+
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 10.0
+    dropout_frac: float = 0.0
+    crash_after_phase2_frac: float = 0.0
+    corrupt_frac: float = 0.0
+
+
+NO_FAULTS = FaultSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerTrace:
+    """Replayable behaviour of every provisioned worker.
+
+    All arrays are length ``n`` (the pool size).  Delays are in
+    arbitrary time units; the scheduler only compares and adds them.
+    """
+
+    share_delay: np.ndarray  # Phase-1 share delivery to worker n
+    compute_delay: np.ndarray  # Phase-2a H(alpha_n) compute duration
+    d2d_delay: np.ndarray  # Phase-2 exchange receive delay at worker n
+    uplink_delay: np.ndarray  # Phase-3 response delay worker -> master
+    dropout: np.ndarray  # bool
+    crash_after_phase2: np.ndarray  # bool
+    corrupt: np.ndarray  # bool
+
+    @property
+    def n(self) -> int:
+        return int(self.share_delay.size)
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            if arr.shape != (self.n,):
+                raise ValueError(f"{f.name} must be a [{self.n}] vector")
+
+    def take(self, n: int) -> "WorkerTrace":
+        """First-n-workers prefix (replay one trace across schemes)."""
+        if n > self.n:
+            raise ValueError(f"trace holds {self.n} workers, need {n}")
+        return WorkerTrace(
+            **{
+                f.name: getattr(self, f.name)[:n].copy()
+                for f in dataclasses.fields(self)
+            }
+        )
+
+    def with_faults(
+        self,
+        dropout_ids: Sequence[int] = (),
+        crash_ids: Sequence[int] = (),
+        corrupt_ids: Sequence[int] = (),
+        straggler_ids: Sequence[int] = (),
+        straggler_slowdown: float = 10.0,
+    ) -> "WorkerTrace":
+        """Deterministic fault placement on explicit worker indices."""
+        out = {f.name: getattr(self, f.name).copy() for f in dataclasses.fields(self)}
+        out["dropout"][list(dropout_ids)] = True
+        out["crash_after_phase2"][list(crash_ids)] = True
+        out["corrupt"][list(corrupt_ids)] = True
+        sl = list(straggler_ids)
+        out["compute_delay"][sl] = out["compute_delay"][sl] * straggler_slowdown
+        return WorkerTrace(**out)._disjoint()
+
+    def _disjoint(self) -> "WorkerTrace":
+        crash = self.crash_after_phase2 & ~self.dropout
+        corrupt = self.corrupt & ~self.dropout & ~crash
+        return dataclasses.replace(self, crash_after_phase2=crash, corrupt=corrupt)
+
+
+def sample_trace(
+    n: int,
+    latency: Optional[LatencyModel] = None,
+    faults: FaultSpec = NO_FAULTS,
+    seed: int = 0,
+    net_scale: float = 0.1,
+) -> WorkerTrace:
+    """Sample one replayable trace for a pool of ``n`` workers.
+
+    ``latency`` drives the compute-time draw; the three network delays
+    (share delivery, D2D exchange, uplink) are independent draws from
+    the same model scaled by ``net_scale`` (edge links are fast relative
+    to compute, but share the same tail shape).
+
+    Draw order is fixed, so two calls with the same seed and ``n`` are
+    identical — but traces of different ``n`` are *not* prefixes of each
+    other; sample once at the largest pool size and ``take`` prefixes
+    when several schemes must see identical worker behaviour.
+    """
+    latency = latency or Deterministic()
+    rng = np.random.default_rng(seed)
+    compute = latency.sample(rng, n)
+    share = net_scale * latency.sample(rng, n)
+    d2d = net_scale * latency.sample(rng, n)
+    uplink = net_scale * latency.sample(rng, n)
+    straggler = rng.random(n) < faults.straggler_frac
+    compute = np.where(straggler, compute * faults.straggler_slowdown, compute)
+    trace = WorkerTrace(
+        share_delay=share,
+        compute_delay=compute,
+        d2d_delay=d2d,
+        uplink_delay=uplink,
+        dropout=rng.random(n) < faults.dropout_frac,
+        crash_after_phase2=rng.random(n) < faults.crash_after_phase2_frac,
+        corrupt=rng.random(n) < faults.corrupt_frac,
+    )
+    return trace._disjoint()

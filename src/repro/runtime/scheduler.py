@@ -1,0 +1,290 @@
+"""Event-driven scheduler: the three-phase protocol over a worker pool.
+
+The static plan machinery already answers "which subsets can serve each
+phase" (``phase2_matrix`` / ``decode_matrix`` for arbitrary ids); this
+module decides *which subset actually does*, by replaying a
+``WorkerTrace`` through a priority-queue event loop:
+
+1. shares go out at t=0 and reach worker n at ``share_delay[n]``;
+   worker n finishes H(alpha_n) ``compute_delay[n]`` later (dropouts
+   never do),
+2. the moment the fastest ``n_workers`` workers have finished, the
+   Phase-2 set is fixed — exactly the paper's straggler mitigation:
+   spares keep primaries from gating the exchange — and every live
+   worker receives its summed I(alpha_n) one D2D delay later,
+3. responses stream back to the master; decode triggers as soon as the
+   fastest ``decode_threshold`` responders are in (the per-subset
+   decode matrix comes from the plan's subset cache, so recurring
+   fastest-subsets cost one Gauss-Jordan total).
+
+Corrupted responses: the master cannot see corruption directly, so when
+``verify_extras > 0`` it withholds acceptance until a decode is
+*confirmed* by that many responders outside the decode subset (the
+interpolated I(x) must reproduce their evaluations).  A corrupt
+response is garbage, so it can neither be confirmed as part of a subset
+nor falsely confirm a clean one; mismatching responders are reported as
+detected-corrupt.  ``verify_extras="auto"`` enables one confirmation
+exactly when the trace can contain corruption.
+
+The numeric path stays on the device-resident protocol ops
+(``share_a/b``, ``worker_multiply``, ``degree_reduce``); the event loop
+only decides subsets and timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core import protocol as proto
+from ..core.planner import CMPCPlan
+from .metrics import RunMetrics
+from .pool import WorkerTrace
+
+
+class DecodeFailure(RuntimeError):
+    """The pool could not complete the protocol (too many faults)."""
+
+
+@dataclasses.dataclass
+class EdgeRun:
+    """Result of one execution over the pool."""
+
+    y: np.ndarray
+    metrics: RunMetrics
+
+
+# Bound on per-event decode-subset search when hunting for a confirmable
+# subset among corrupt responses; the search resumes at the next arrival.
+# Half the budget goes to the deterministic colex front (fastest-first),
+# half to seeded random subsets that keep heavy corruption from starving
+# the front (see _candidate_subsets).
+_MAX_SUBSET_TRIES = 128
+
+
+def run_over_pool(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    trace: WorkerTrace,
+    seed: int = 0,
+    verify_extras="auto",
+    master_decode_cost: float = 0.0,
+) -> EdgeRun:
+    """Execute Y = A^T B over the simulated pool described by ``trace``.
+
+    Returns the decoded product and the run's :class:`RunMetrics`.
+    Raises :class:`DecodeFailure` when the surviving pool cannot serve
+    Phase 2 (fewer than ``n_workers`` live workers) or the master never
+    accumulates an acceptable responder subset.
+    """
+    n_total = plan.n_total
+    if trace.n != n_total:
+        raise ValueError(
+            f"trace covers {trace.n} workers, plan provisions {n_total} "
+            f"({plan.n_workers} + {plan.n_spare} spare)"
+        )
+    if verify_extras == "auto":
+        verify_extras = 1 if bool(trace.corrupt.any()) else 0
+    thr = plan.decode_threshold
+    p = plan.field.p
+    rng = np.random.default_rng(seed)
+
+    alive = ~trace.dropout
+    if int(alive.sum()) < plan.n_workers:
+        raise DecodeFailure(
+            f"{int(trace.dropout.sum())} dropouts leave "
+            f"{int(alive.sum())} live workers < n_workers={plan.n_workers}"
+        )
+
+    # Data plane, Phase 1: sources evaluate and ship shares.
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    h = proto.worker_multiply(plan, fa, fb)
+
+    share_at = trace.share_delay
+    phase1_last = float(share_at[alive].max())
+
+    # Event loop.  Heap entries: (time, seq, kind, worker).
+    events: list = []
+    seq = itertools.count()
+    for w in np.flatnonzero(alive):
+        heapq.heappush(
+            events,
+            (float(share_at[w] + trace.compute_delay[w]), next(seq), "compute", int(w)),
+        )
+
+    computed: list = []  # worker ids in compute-completion order
+    phase2_ids: Optional[np.ndarray] = None
+    phase2_set_time = float("nan")
+    i_all: Optional[np.ndarray] = None
+    vander_check: Optional[np.ndarray] = None
+    arrived: list = []  # (time, worker) in response-arrival order
+    first_response = float("nan")
+    decode_cache: dict = {}  # subset id-tuple -> coeffs, across arrivals
+
+    while events:
+        t_now, _, kind, w = heapq.heappop(events)
+
+        if kind == "compute":
+            computed.append(w)
+            if len(computed) != plan.n_workers:
+                continue
+            # Fastest n_workers fix the Phase-2 set; the mixing matrix
+            # interpolates over exactly this subset (sorted for a
+            # canonical subset-cache key).
+            phase2_ids = np.sort(np.array(computed))
+            phase2_set_time = t_now
+            # np.array (not asarray): device outputs are read-only views
+            # and corrupt rows are overwritten below.
+            i_all = np.array(
+                proto.degree_reduce(plan, h, rng, worker_ids=phase2_ids)
+            )
+            # Corrupt workers respond with garbage of the right shape.
+            for c in np.flatnonzero(trace.corrupt & alive):
+                i_all[c] = rng.integers(0, p, size=i_all[c].shape, dtype=np.int64)
+            vander_check = plan.field.vandermonde(plan.alphas, range(thr))
+            # Live, non-crashed workers respond one exchange + uplink
+            # delay after the set is announced.
+            for r in np.flatnonzero(alive & ~trace.crash_after_phase2):
+                heapq.heappush(
+                    events,
+                    (
+                        float(t_now + trace.d2d_delay[r] + trace.uplink_delay[r]),
+                        next(seq),
+                        "response",
+                        int(r),
+                    ),
+                )
+            continue
+
+        # kind == "response"
+        if not arrived:
+            first_response = t_now
+        arrived.append((t_now, w))
+        if len(arrived) < thr + verify_extras:
+            continue
+        accepted = _try_decode(
+            plan, i_all, arrived, verify_extras, vander_check, rng, decode_cache
+        )
+        if accepted is None:
+            continue
+        coeffs, responder_ids, confirmed_by, rejected = accepted
+        y = proto.assemble_y(plan, coeffs)
+        completion = t_now + master_decode_cost
+        # crash-after-phase-2 workers fully serve the exchange (they
+        # only skip the Phase-3 report), so they count as receivers
+        n_recv = int(alive.sum())
+        sh = plan.shapes
+        t = plan.scheme.t
+        blk_y = (sh.ma // t) * (sh.mb // t)
+        comm = proto.Trace(
+            phase1_source_to_worker=n_total
+            * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
+            phase2_worker_to_worker=plan.n_workers * (n_recv - 1) * blk_y,
+            phase3_worker_to_master=len(arrived) * blk_y,
+            elem_bytes=plan.field.elem_bytes,
+        )
+        metrics = RunMetrics(
+            completion_time=float(completion),
+            phase1_last_share=phase1_last,
+            phase2_set_time=phase2_set_time,
+            first_response=float(first_response),
+            n_provisioned=n_total,
+            n_dropped=int(trace.dropout.sum()),
+            n_crashed=int((trace.crash_after_phase2 & alive).sum()),
+            phase2_ids=phase2_ids,
+            responder_ids=responder_ids,
+            confirmed_by=confirmed_by,
+            rejected_ids=rejected,
+            trace=comm,
+        )
+        return EdgeRun(y=y, metrics=metrics)
+
+    raise DecodeFailure(
+        f"events exhausted before an acceptable decode: {len(arrived)} "
+        f"responses arrived, need {thr} + {verify_extras} confirmations "
+        f"(threshold {thr}); dropouts={int(trace.dropout.sum())}, "
+        f"crashed={int((trace.crash_after_phase2 & alive).sum())}, "
+        f"corrupt={int((trace.corrupt & alive).sum())}"
+    )
+
+
+def _candidate_subsets(k: int, thr: int, rng: np.random.Generator):
+    """Arrival-position subsets, fastest-first, with a randomized tail.
+
+    The deterministic front is *colex* order — every subset of the
+    fastest ``m`` arrivals is enumerated before any subset touching
+    arrival ``m+1`` — so the first candidate is the fastest ``thr``
+    and a capped search always spends its budget on the fastest
+    responders (plain lex order front-loads subsets *containing* the
+    earliest arrivals, which livelocks when one of those is corrupt).
+    After half the budget the generator switches to seeded random
+    subsets: with ``c`` corrupt responders among ``k`` a uniform draw
+    is clean with probability C(k-c, thr)/C(k, thr), so a few dozen
+    draws find a clean subset even when the colex front is saturated
+    with corrupt members.
+    """
+    n = 0
+    for m in range(thr, k + 1):
+        for head in itertools.combinations(range(m - 1), thr - 1):
+            yield head + (m - 1,)
+            n += 1
+            if n >= _MAX_SUBSET_TRIES // 2:
+                break
+        else:
+            continue
+        break
+    while n < _MAX_SUBSET_TRIES:
+        yield tuple(np.sort(rng.choice(k, size=thr, replace=False)))
+        n += 1
+
+
+def _try_decode(
+    plan: CMPCPlan,
+    i_all: np.ndarray,
+    arrived: list,
+    verify_extras: int,
+    vander_check: np.ndarray,
+    rng: np.random.Generator,
+    decode_cache: dict,
+) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Search arrival-ordered responder subsets for an acceptable decode.
+
+    Returns (coeffs, responder_ids, confirmed_by, rejected_ids) or None
+    if no subset of the responses so far can be accepted.  A subset is
+    accepted when the interpolated I(x) reproduces the responses of at
+    least ``verify_extras`` responders outside it (garbage responses
+    can neither pass as subset members nor confirm a clean subset, so
+    a corrupt witness only defers acceptance to the next arrival).
+    A rejected subset must be re-*verified* at later arrivals (a new
+    witness can confirm it) but never re-*decoded*: ``decode_cache``
+    holds its coefficients across calls within one run.
+    """
+    thr = plan.decode_threshold
+    ids_by_arrival = [w for _, w in arrived]
+    flat = i_all.reshape(i_all.shape[0], -1)
+    seen = set()
+    for subset_pos in _candidate_subsets(len(ids_by_arrival), thr, rng):
+        if subset_pos in seen:
+            continue
+        seen.add(subset_pos)
+        subset = [ids_by_arrival[i] for i in subset_pos]
+        ids = np.sort(np.array(subset))
+        key = tuple(int(i) for i in ids)
+        coeffs = decode_cache.get(key)
+        if coeffs is None:
+            w_dec = plan.decode_matrix_cached(ids)
+            coeffs = plan.field.matmul(w_dec, flat[ids])
+            decode_cache[key] = coeffs
+        if verify_extras == 0:
+            return coeffs, ids, np.array([], np.int64), np.array([], np.int64)
+        others = np.array([j for j in ids_by_arrival if j not in subset])
+        pred = plan.field.matmul(vander_check[others], coeffs)
+        ok = np.all(pred == flat[others], axis=1)
+        if int(ok.sum()) >= verify_extras:
+            return coeffs, ids, others[ok], others[~ok]
+    return None

@@ -1,0 +1,212 @@
+"""Edge worker-pool runtime: event-driven scheduling, fastest-subset
+decode, fault injection, and metrics/trace accounting.
+
+Fast tier-1 coverage: small scheme, deterministic or crafted latency,
+fixed seeds — every run validated against the host oracle."""
+import numpy as np
+import pytest
+
+from repro.core import constructions as C
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, make_plan
+from repro.runtime import (
+    DecodeFailure,
+    Deterministic,
+    FaultSpec,
+    HeavyTail,
+    ShiftedExponential,
+    run_over_pool,
+    sample_trace,
+    summarize,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    field = Field()
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, n_spare=3, seed=1)
+    rng = np.random.default_rng(0)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    return plan, a, b, field.matmul(a.T, b)
+
+
+def test_all_fast_smoke(setup):
+    """Deterministic pool: correct decode, fully known timeline."""
+    plan, a, b, want = setup
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=2)
+    run = run_over_pool(plan, a, b, trace, seed=3)
+    assert np.array_equal(run.y, want)
+    m = run.metrics
+    # share (0.1) + compute (1.0) + d2d (0.1) + uplink (0.1), all equal
+    assert m.completion_time == pytest.approx(1.3)
+    assert m.phase2_set_time == pytest.approx(1.1)
+    assert m.responder_ids.size == plan.decode_threshold
+    assert m.phase2_ids.size == plan.n_workers
+    assert m.n_dropped == 0 and m.rejected_ids.size == 0
+    # bytes view consistent with the element counts
+    assert m.trace.total_bytes == m.trace.total * plan.field.elem_bytes
+    # phase 1 provisions every worker, spares included
+    sh = plan.shapes
+    per_worker = sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]
+    assert m.trace.phase1_source_to_worker == plan.n_total * per_worker
+
+
+def test_stragglers_excluded_from_phase2(setup):
+    """Slowed workers must not gate the Phase-2 barrier."""
+    plan, a, b, want = setup
+    slow = [0, 5]
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=4).with_faults(
+        straggler_ids=slow, straggler_slowdown=100.0
+    )
+    run = run_over_pool(plan, a, b, trace, seed=5)
+    assert np.array_equal(run.y, want)
+    assert not set(slow) & set(run.metrics.phase2_ids.tolist())
+    # barrier time unaffected by the stragglers
+    assert run.metrics.phase2_set_time == pytest.approx(1.1)
+
+
+def test_dropouts_up_to_spares(setup):
+    plan, a, b, want = setup
+    drop = list(range(plan.n_spare))
+    trace = sample_trace(
+        plan.n_total, ShiftedExponential(1.0, 0.3), seed=6
+    ).with_faults(dropout_ids=drop)
+    run = run_over_pool(plan, a, b, trace, seed=7)
+    assert np.array_equal(run.y, want)
+    assert run.metrics.n_dropped == plan.n_spare
+    used = set(run.metrics.phase2_ids.tolist()) | set(
+        run.metrics.responder_ids.tolist()
+    )
+    assert not set(drop) & used
+
+
+def test_too_many_dropouts_fail_loudly(setup):
+    plan, a, b, _ = setup
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=8).with_faults(
+        dropout_ids=list(range(plan.n_spare + 1))
+    )
+    with pytest.raises(DecodeFailure, match="dropouts"):
+        run_over_pool(plan, a, b, trace, seed=9)
+
+
+def test_crash_after_phase2(setup):
+    """Crashers serve the exchange but never respond to the master."""
+    plan, a, b, want = setup
+    crash = [1, 3]
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=10).with_faults(
+        crash_ids=crash
+    )
+    run = run_over_pool(plan, a, b, trace, seed=11)
+    assert np.array_equal(run.y, want)
+    assert run.metrics.n_crashed == 2
+    assert not set(crash) & set(run.metrics.responder_ids.tolist())
+
+
+def test_corrupt_response_detected(setup):
+    """A corrupted fast responder must be kept out of the accepted
+    subset via decode-consistency confirmation."""
+    plan, a, b, want = setup
+    trace = sample_trace(
+        plan.n_total, ShiftedExponential(1.0, 0.2), seed=12
+    ).with_faults(corrupt_ids=[2])
+    run = run_over_pool(plan, a, b, trace, seed=13)  # verify_extras="auto"
+    assert np.array_equal(run.y, want)
+    assert 2 not in run.metrics.responder_ids
+    assert run.metrics.confirmed_by.size >= 1
+
+
+def test_many_corrupt_fast_responders(setup):
+    """Several corrupted workers among the very fastest responders must
+    not starve the subset search (colex front + randomized tail)."""
+    plan, a, b, want = setup
+    # deterministic latency -> workers respond in id order; corrupt the
+    # three earliest so every fastest-prefix subset is poisoned
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=40).with_faults(
+        corrupt_ids=[0, 1, 2]
+    )
+    run = run_over_pool(plan, a, b, trace, seed=41)
+    assert np.array_equal(run.y, want)
+    assert not {0, 1, 2} & set(run.metrics.responder_ids.tolist())
+
+
+def test_heavy_tail_model_runs(setup):
+    plan, a, b, want = setup
+    trace = sample_trace(plan.n_total, HeavyTail(1.0, 0.5, 1.5), seed=14)
+    run = run_over_pool(plan, a, b, trace, seed=15)
+    assert np.array_equal(run.y, want)
+
+
+def test_trace_prefix_replay():
+    """take(n) replays the same per-worker behaviour across pool sizes
+    (the identical-traces contract of the scheme comparison)."""
+    full = sample_trace(25, ShiftedExponential(1.0, 1.0),
+                        FaultSpec(dropout_frac=0.1), seed=16)
+    part = full.take(20)
+    assert np.array_equal(part.compute_delay, full.compute_delay[:20])
+    assert np.array_equal(part.dropout, full.dropout[:20])
+    with pytest.raises(ValueError):
+        full.take(26)
+
+
+def test_trace_mismatch_rejected(setup):
+    plan, a, b, _ = setup
+    trace = sample_trace(plan.n_total - 1, Deterministic(1.0), seed=17)
+    with pytest.raises(ValueError, match="provisions"):
+        run_over_pool(plan, a, b, trace, seed=18)
+
+
+def test_fault_flags_disjoint():
+    trace = sample_trace(
+        200,
+        Deterministic(1.0),
+        FaultSpec(dropout_frac=0.3, crash_after_phase2_frac=0.3,
+                  corrupt_frac=0.3),
+        seed=19,
+    )
+    assert not (trace.dropout & trace.crash_after_phase2).any()
+    assert not (trace.dropout & trace.corrupt).any()
+    assert not (trace.crash_after_phase2 & trace.corrupt).any()
+
+
+def test_sharded_phase2_worker_subset(setup):
+    """run_phase2_sharded serves an arbitrary sender subset (the hook
+    the runtime needs to drive the real shard_map exchange)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core import protocol as proto
+    from repro.core.distributed import run_phase2_sharded
+
+    plan, a, b, want = setup
+    field = Field()
+    rng = np.random.default_rng(30)
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    ids = np.array([i for i in range(plan.n_total) if i not in (0, 2)])
+    ids = ids[: plan.n_workers]
+    blk = plan.shapes.blk_y
+    noise = field.random(rng, (plan.n_workers, plan.scheme.z) + blk)
+    mesh = Mesh(np.array(jax.devices()), ("workers",))
+    i_evals = run_phase2_sharded(plan, fa, fb, noise, mesh, worker_ids=ids)
+    y = proto.reconstruct(
+        plan, i_evals, worker_ids=np.arange(2, 2 + plan.decode_threshold)
+    )
+    assert np.array_equal(y, want)
+
+
+def test_summarize(setup):
+    plan, a, b, _ = setup
+    runs = []
+    for seed in range(3):
+        trace = sample_trace(plan.n_total, ShiftedExponential(1.0, 0.5),
+                             seed=20 + seed)
+        runs.append(run_over_pool(plan, a, b, trace, seed=seed).metrics)
+    agg = summarize(runs)
+    assert agg["runs"] == 3
+    assert agg["completion_p50"] <= agg["completion_p95"] <= agg["completion_max"]
+    assert 1 <= agg["decode_subsets_distinct"] <= 3
+    assert agg["n_provisioned"] == plan.n_total
+    assert summarize([]) == {"runs": 0}
