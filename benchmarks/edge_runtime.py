@@ -25,6 +25,21 @@ Scenarios:
                             responder; the master must spend one extra
                             confirmation before accepting a decode.
 
+Two batched sections ride along:
+
+* ``batched_replay``   — ``run_batch_over_pool`` replays a whole batch
+                          of products through ONE straggler trace; the
+                          event loop and decode-subset search are paid
+                          once, so the per-product cost drops against a
+                          loop of ``run_over_pool`` calls,
+* ``sharded_batched``  — the same batched replay with the Phase-2
+                          exchange on a REAL multi-device mesh
+                          (``shard_map`` all_to_all driven by the
+                          scheduler's fastest subset), in a subprocess
+                          with ``--xla_force_host_platform_device_count``
+                          so the forced device split cannot perturb the
+                          single-device scenario numbers.
+
 Emits ``BENCH_edge.json`` at the repo root (``make bench-edge``) with
 per-scenario completion statistics, worker counts, and the
 PolyDot/AGE completion ratio, plus a CSV under results/bench/.
@@ -33,6 +48,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -45,16 +61,115 @@ from repro.runtime import (
     FaultSpec,
     HeavyTail,
     ShiftedExponential,
+    run_batch_over_pool,
     run_over_pool,
     sample_trace,
     summarize,
 )
 
-from .common import repo_root, write_csv
+from .common import repo_root, run_sharded_child, timeit, write_csv
 
 JSON_NAME = "BENCH_edge.json"
 
 METHODS = ("polydot", "age")
+
+# Batched-replay scenario: products per trace replay, and the forced
+# host device count for the sharded child mesh.
+BATCH_REPLAY = 8
+SHARDED_DEVICES = 8
+
+
+def _batched_replay_report(plans, field, rng, m) -> dict:
+    """Per-method amortization of the batched replay vs a run loop."""
+    a = field.random(rng, (BATCH_REPLAY, m, m))
+    b = field.random(rng, (BATCH_REPLAY, m, m))
+    want = np.stack([field.matmul(a[i].T, b[i]) for i in range(BATCH_REPLAY)])
+    latency = ShiftedExponential(shift=1.0, scale=1.0)
+    faults = FaultSpec(straggler_frac=0.2, straggler_slowdown=10.0)
+    out = {}
+    for meth, plan in plans.items():
+        trace = sample_trace(plan.n_total, latency, faults, seed=77)
+        res = run_batch_over_pool(plan, a, b, trace, seed=78)
+        if not np.array_equal(res.y, want):
+            raise AssertionError(f"{meth}: batched replay disagrees with oracle")
+
+        def loop():
+            for i in range(BATCH_REPLAY):
+                run_over_pool(plan, a[i], b[i], trace, seed=78)
+
+        loop_us = timeit(loop, repeat=3) / BATCH_REPLAY
+        batched_us = (
+            timeit(lambda: run_batch_over_pool(plan, a, b, trace, seed=78), repeat=3)
+            / BATCH_REPLAY
+        )
+        out[meth] = {
+            "batch": BATCH_REPLAY,
+            "loop_us_per_product": round(loop_us, 1),
+            "batched_us_per_product": round(batched_us, 1),
+            "amortization": round(loop_us / batched_us, 2),
+            "oracle_validated": True,
+        }
+    return out
+
+
+def _sharded_child():
+    """Child entry (multi-device host): the batched edge replay with the
+    scheduler-driven shard_map Phase 2.  Prints ONE JSON line."""
+    import jax
+    from jax.sharding import Mesh
+
+    field = Field()
+    rng = np.random.default_rng(0)
+    m, s, t, z, n_spare = 32, 2, 2, 3, 3
+    shapes = BlockShapes(k=m, ma=m, mb=m, s=s, t=t)
+    schemes = {meth: C.build_scheme(meth, s, t, z) for meth in METHODS}
+    pool = max(sch.n_workers for sch in schemes.values()) + n_spare
+    plans = {
+        meth: get_plan(schemes[meth], shapes, n_spare=pool - sch.n_workers)
+        for meth, sch in schemes.items()
+    }
+    mesh = Mesh(np.array(jax.devices()), ("workers",))
+    a = field.random(rng, (BATCH_REPLAY, m, m))
+    b = field.random(rng, (BATCH_REPLAY, m, m))
+    want = np.stack([field.matmul(a[i].T, b[i]) for i in range(BATCH_REPLAY)])
+    latency = ShiftedExponential(shift=1.0, scale=1.0)
+    faults = FaultSpec(straggler_frac=0.2, straggler_slowdown=10.0)
+    out = {
+        "devices": len(jax.devices()),
+        "batch": BATCH_REPLAY,
+        "mode": "all_to_all",
+        "pool_size": pool,
+        "methods": {},
+    }
+    for meth, plan in plans.items():
+        trace = sample_trace(pool, latency, faults, seed=88)
+        res = run_batch_over_pool(plan, a, b, trace, seed=89, mesh=mesh)
+        if not np.array_equal(res.y, want):
+            raise AssertionError(f"{meth}: sharded batched replay != oracle")
+        us = (
+            timeit(
+                lambda: run_batch_over_pool(plan, a, b, trace, seed=89, mesh=mesh),
+                repeat=3,
+            )
+            / BATCH_REPLAY
+        )
+        out["methods"][meth] = {
+            "us_per_product": round(us, 1),
+            # ONE replay's simulated completion (not a percentile — the
+            # scenario percentiles live under "scenarios")
+            "completion_time": round(res.metrics.completion_time, 4),
+            "phase2_subset_nonprefix": bool(
+                not np.array_equal(
+                    res.metrics.phase2_ids, np.arange(plan.n_workers)
+                )
+            ),
+        }
+    out["validated"] = True
+    print(json.dumps(out))
+
+
+def _sharded_report() -> dict:
+    return run_sharded_child("benchmarks.edge_runtime", SHARDED_DEVICES)
 
 
 def _scenarios(n_spare: int):
@@ -169,6 +284,8 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
             - plans["age"].n_workers,
         },
         "scenarios": scenarios,
+        "batched_replay": _batched_replay_report(plans, field, rng, m),
+        "sharded_batched": _sharded_report(),
         "subset_cache": subset_cache_info(),
     }
     json_path = os.path.join(repo_root(), JSON_NAME)
@@ -190,5 +307,8 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}")

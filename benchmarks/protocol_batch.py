@@ -23,12 +23,20 @@ PRs can track the perf trajectory:
                         decode,
 * ``padding_waste``  — per hot-matmul-shape fraction of MXU MACs spent
                         on padding under the fixed legacy 128/128/256
-                        tiling vs the shape-adaptive ``pick_tiles``.
+                        tiling vs the shape-adaptive ``pick_tiles``,
+* ``sharded_batched``— the batched engine with the *distributed*
+                        Phase 2 (``run_batched_sharded``): per exchange
+                        mode, per-product latency on a forced
+                        multi-device host mesh, validated bit-identical
+                        against ``run_batched``.  Runs in a subprocess
+                        so ``--xla_force_host_platform_device_count``
+                        cannot perturb the main single-device numbers.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 import numpy as np
 
@@ -38,7 +46,7 @@ from repro.core.gf import Field
 from repro.core.planner import BlockShapes, get_plan
 from repro.kernels.modmatmul.ops import padding_waste, pick_tiles
 
-from .common import repo_root, timeit, write_csv
+from .common import repo_root, run_sharded_child, timeit, write_csv
 
 BATCHES = (1, 8, 16, 32)
 
@@ -53,6 +61,69 @@ PR1_BASELINE_US = {1: 6995.5, 8: 3285.1, 16: 3033.8, 32: 3851.4}
 FIXED_TILES = (128, 128, 256)  # the legacy hardcoded tiling
 
 JSON_NAME = "BENCH_protocol.json"
+
+# Sharded-batched scenario: forced host device count for the child mesh
+# and the batch that rides each collective.
+SHARDED_DEVICES = 8
+SHARDED_BATCH = 16
+SHARDED_MODES = ("all_to_all", "psum", "psum_scatter")
+
+
+def _sharded_child():
+    """Child entry (multi-device host): validate + time run_batched_sharded.
+
+    Prints ONE JSON line; the parent embeds it under ``sharded_batched``.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    field = Field()
+    rng = np.random.default_rng(0)
+    m, s, t, z = 64, 2, 2, 2
+    sch = C.build_scheme("age", s, t, z)
+    shapes = BlockShapes(k=m, ma=m, mb=m, s=s, t=t)
+    plan = get_plan(sch, shapes, n_spare=2)
+    mesh = Mesh(np.array(jax.devices()), ("workers",))
+    a = field.random(rng, (SHARDED_BATCH, m, m))
+    b = field.random(rng, (SHARDED_BATCH, m, m))
+    want, _ = proto.run_batched(plan, a, b, seed=0)
+    # a non-prefix sender subset exercises the cached subset mix path
+    ids2 = np.arange(1, 1 + plan.n_workers)
+    dense_us = (
+        timeit(lambda: np.asarray(proto.run_batched(plan, a, b, seed=0)[0]), repeat=3)
+        / SHARDED_BATCH
+    )
+    out = {
+        "devices": len(jax.devices()),
+        "batch": SHARDED_BATCH,
+        "n_workers": plan.n_workers,
+        "n_spare": plan.n_spare,
+        "batched_dense_us_per_product": round(dense_us, 1),
+        "modes": {},
+    }
+    for mode in SHARDED_MODES:
+        y, _ = proto.run_batched_sharded(
+            plan, a, b, mesh, mode=mode, seed=0, phase2_ids=ids2
+        )
+        if not np.array_equal(y, want):
+            raise AssertionError(f"sharded mode {mode} disagrees with run_batched")
+        us = (
+            timeit(
+                lambda: np.asarray(
+                    proto.run_batched_sharded(plan, a, b, mesh, mode=mode, seed=0)[0]
+                ),
+                repeat=3,
+            )
+            / SHARDED_BATCH
+        )
+        out["modes"][mode] = {"us_per_product": round(us, 1)}
+    out["validated"] = True
+    print(json.dumps(out))
+
+
+def _sharded_report() -> dict:
+    """Run the sharded scenario in a forced-multi-device subprocess."""
+    return run_sharded_child("benchmarks.protocol_batch", SHARDED_DEVICES)
 
 
 def _phase_times(plan, a, b) -> dict:
@@ -171,6 +242,7 @@ def run():
         "batches": rows,
         "phases_us": _phase_times(plan, a1, b1),
         "padding_waste": _padding_report(plan),
+        "sharded_batched": _sharded_report(),
     }
     json_path = os.path.join(repo_root(), JSON_NAME)
     with open(json_path, "w") as f:
@@ -189,5 +261,8 @@ def run():
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}")

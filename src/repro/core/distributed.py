@@ -21,19 +21,25 @@ TPU-native adaptation of the paper's edge-worker topology (DESIGN.md
                           O(N m^2/t^2) because the sum into I(x) is
                           *linear* and can be fused into the collective.
 
-Integer safety: all lane values are < p < 2**16 and reductions happen
-on int32 partial sums reduced mod p per device, so totals stay below
-D * p << 2**31 for any realistic axis size.
+The exchange is batched: a whole batch of products rides one collective
+by folding the batch axis into each worker's flattened block payload
+(the exchange is elementwise over the payload, so the collective shape
+is the only thing that grows).  ``protocol.run_batched_sharded`` and
+the edge runtime's ``run_batch_over_pool`` enter through this path.
+
+Integer safety: all lane values are < p < 2**16 and ``_mod_sum``
+accumulates at most ``npad`` (the pool padded to the axis size) int32
+partial values before reducing mod p, so the requirement is
+``npad * p < 2**31`` — independent of ``n_workers``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
 
@@ -66,13 +72,18 @@ def run_phase2_sharded(
 
     fa: [n_total, br, bk] shares, fb: [n_total, bk, bc]; noise:
     [n_workers, z, br, bc] per-worker blinding matrices R_w^{(n)}.
-    Returns I(alpha_n) for all (unpadded) provisioned workers.
+    Batched: fa [batch, n_total, br, bk], fb [batch, n_total, bk, bc],
+    noise [batch, n_workers, z, br, bc] — the batch folds into each
+    worker's flat payload, so the whole batch rides ONE collective.
+    Returns I(alpha_n) for all (unpadded) provisioned workers:
+    [n_total, br, bc], or [batch, n_total, br, bc] for batched inputs.
 
     ``worker_ids`` selects which ``n_workers`` of the provisioned pool
     serve as Phase-2 senders (straggler mitigation — e.g. the fastest
     subset picked by ``repro.runtime``); ``noise`` rows follow the same
     order.  Non-senders are receive-only (zero mix rows), matching the
-    pad workers.  Default is the primary prefix.
+    pad workers.  Default is the primary prefix; explicit subsets reuse
+    the plan's cached subset mix matrices.
 
     ``matmul_backend`` threads through to the kernel layer
     (``auto``/``pallas``/``f32limb``): the per-shard worker multiply is
@@ -82,7 +93,10 @@ def run_phase2_sharded(
     p = plan.field.p
     d = mesh.shape[axis]
     n_total = plan.n_total
-    assert n_total * max(1, plan.n_workers) < (1 << 31) // p, "int32 reduction bound"
+    # _mod_sum accumulates <= npad int32 values < p before reducing, so
+    # the bound is npad * p (padded pool size; n_workers plays no role).
+    npad = n_total + ((-n_total) % d)
+    assert npad * p < (1 << 31), "int32 reduction bound: npad * p < 2**31"
 
     if worker_ids is None:
         ids = np.arange(plan.n_workers)
@@ -91,17 +105,31 @@ def run_phase2_sharded(
         ids = np.asarray(worker_ids)
         mix = plan.phase2_matrix_cached(ids)
 
-    # Pad worker-stacked operands to the axis size; pad workers are
-    # receive-only (zero mix rows / zero noise).
-    fa_p = _pad_to_multiple(np.asarray(fa), d)
-    fb_p = _pad_to_multiple(np.asarray(fb), d)
-    npad = fa_p.shape[0]
+    fa_np = np.asarray(fa)
+    fb_np = np.asarray(fb)
+    noise_np = np.asarray(noise)
+    batched = fa_np.ndim == 4
+    if not batched:
+        fa_np = fa_np[None]
+        fb_np = fb_np[None]
+        noise_np = noise_np[None]
+    batch = fa_np.shape[0]
+
+    # Worker axis leads on the mesh; the batch joins the per-worker
+    # payload.  Pad worker-stacked operands to the axis size; pad
+    # workers are receive-only (zero mix rows / zero noise).
+    fa_p = _pad_to_multiple(np.moveaxis(fa_np, 1, 0), d)  # [npad, batch, br, bk]
+    fb_p = _pad_to_multiple(np.moveaxis(fb_np, 1, 0), d)
+    assert fa_p.shape[0] == npad
     mix_rows = np.zeros((npad, npad), np.int64)
     mix_rows[ids, :n_total] = mix  # [senders, receivers]
     vnz = np.zeros((npad, plan.scheme.z), np.int64)
     vnz[:n_total] = plan.vnoise
-    noise_p = np.zeros((npad,) + noise.shape[1:], np.int64)
-    noise_p[ids] = noise
+    # noise rows follow ids order; layout [npad, z, batch, br, bc] so the
+    # local reshape (nloc, z, payload) flattens batch into the payload.
+    noise_w = np.moveaxis(noise_np, 0, 2)  # [n_workers, z, batch, br, bc]
+    noise_p = np.zeros((npad,) + noise_w.shape[1:], np.int64)
+    noise_p[ids] = noise_w
 
     mix_j = jnp.asarray(mix_rows.astype(np.int32))
     vn_j = jnp.asarray(vnz.astype(np.int32))
@@ -109,13 +137,14 @@ def run_phase2_sharded(
     fa_j = jnp.asarray(fa_p)
     fb_j = jnp.asarray(fb_p)
 
-    br = fa_p.shape[1]
-    bc = fb_p.shape[2]
-    blk = br * bc
+    br = fa_p.shape[2]
+    bc = fb_p.shape[3]
+    blk = batch * br * bc  # per-worker flat payload (whole batch)
 
     def local(fa_l, fb_l, mix_l, noise_l):
-        # Phase 2a: every local worker multiplies its shares.
-        h_l = mod_matmul(fa_l, fb_l, p=p, backend=matmul_backend)  # [nloc, br, bc]
+        # Phase 2a: every local worker multiplies its shares (the batch
+        # is just another leading dim of the batched mod_matmul).
+        h_l = mod_matmul(fa_l, fb_l, p=p, backend=matmul_backend)  # [nloc, batch, br, bc]
         nloc = h_l.shape[0]
         h_flat = h_l.reshape(nloc, blk)
         # Phase 2b: local workers' G evaluated at every receiver:
@@ -155,7 +184,7 @@ def run_phase2_sharded(
             i_local = jax.lax.psum_scatter(part, axis, scatter_dimension=0, tiled=True) % p
         else:
             raise ValueError(f"unknown mode {mode}")
-        return i_local.astype(jnp.int32).reshape(-1, br, bc)
+        return i_local.astype(jnp.int32).reshape(-1, batch, br, bc)
 
     spec = P(axis)
     shard_fn = shard_map(
@@ -169,9 +198,10 @@ def run_phase2_sharded(
     if return_compiled:
         return jitted.lower(fa_j, fb_j, mix_j, noise_j).compile()
     i_evals = np.asarray(jitted(fa_j, fb_j, mix_j, noise_j))
-    return i_evals[:n_total]
+    i_evals = np.moveaxis(i_evals[:n_total], 0, 1)  # [batch, n_total, br, bc]
+    return i_evals if batched else i_evals[0]
 
 
 def _mod_sum(x: jnp.ndarray, p: int) -> jnp.ndarray:
-    """Sum over axis 0 with int32 accumulation (safe: N * p < 2**31)."""
+    """Sum over axis 0 with int32 accumulation (safe: npad * p < 2**31)."""
     return (jnp.sum(x.astype(jnp.int32), axis=0) % p).astype(jnp.int32)

@@ -127,6 +127,19 @@ class CMPCPlan:
             return self.mix
         return self._subset_cached("mix", ids, self.phase2_matrix)
 
+    def decode_check_matrix(self) -> np.ndarray:
+        """Vandermonde of *every* provisioned alpha on the decode powers
+        0..t^2+z-1 — the master's consistency-check matrix (an accepted
+        I(x) must reproduce the evaluations of extra responders).  Built
+        once per plan and memoized like ``device_plan``: the edge
+        runtime consults it on every run, and rebuilding it was a
+        per-call host loop in the replay hot path."""
+        v = self.__dict__.get("_decode_check_v")
+        if v is None:
+            v = self.field.vandermonde(self.alphas, range(self.decode_threshold))
+            object.__setattr__(self, "_decode_check_v", v)
+        return v
+
     def decode_matrix_cached(self, worker_ids: Sequence[int]) -> np.ndarray:
         ids = np.asarray(worker_ids)
         thr = self.decode_threshold

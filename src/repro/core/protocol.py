@@ -16,10 +16,15 @@ so the same code runs single-host (vmapped) or sharded over a mesh axis
 via ``repro.core.distributed``.  All modular compute routes through the
 ``modmatmul`` kernel ops so the TPU path uses the Pallas kernel.
 
-Two execution paths:
+Three execution paths:
 
 * ``run``          — per-product reference: host-side block stacking and
                      Phase-3 decode in numpy (the test oracle),
+* ``run_batched_sharded`` — the batched pipeline with the *distributed*
+                     Phase 2: the degree-reduction exchange is the
+                     ``shard_map`` collective of ``core.distributed``
+                     (``all_to_all`` / ``psum`` / ``psum_scatter``),
+                     with Phases 1 and 3 on the same jitted kernels,
 * ``run_batched``  — batched, fully-jitted, device-resident pipeline:
                      share evaluation, worker multiply, degree reduction
                      and decode execute inside one jitted computation
@@ -55,9 +60,13 @@ class Trace:
 
     Phase-1 counts cover every *provisioned* worker (primaries and
     spares alike — spares receive shares up front so they can step in),
-    matching Corollary 12's accounting at N = n_total.  ``elem_bytes``
-    (the field's wire width, ``Field.elem_bytes``) converts the element
-    counts into the bytes-level view used by the runtime metrics.
+    matching Corollary 12's accounting at N = n_total.  Phase-2 counts
+    are spare-inclusive on the *receive* side for the same reason: each
+    of the ``n_workers`` senders reaches the other ``n_total - 1``
+    provisioned workers, because Phase 3 may decode from any of them.
+    ``elem_bytes`` (the field's wire width, ``Field.elem_bytes``)
+    converts the element counts into the bytes-level view used by the
+    runtime metrics.
     """
 
     phase1_source_to_worker: int = 0
@@ -368,10 +377,109 @@ def device_plan(plan: CMPCPlan) -> DevicePlan:
 
 
 @functools.partial(
+    jax.jit, static_argnames=("p", "s", "t", "z", "na", "nb", "backend")
+)
+def _share_batched_jit(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    key: jnp.ndarray,
+    va: jnp.ndarray,
+    vb: jnp.ndarray,
+    a_pos: jnp.ndarray,
+    sa_pos: jnp.ndarray,
+    b_pos: jnp.ndarray,
+    sb_pos: jnp.ndarray,
+    *,
+    p: int,
+    s: int,
+    t: int,
+    z: int,
+    na: int,
+    nb: int,
+    backend: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Phase 1 for a batch of products, on device.
+
+    a: [batch, k, ma], b: [batch, k, mb] int32 in [0, p).  Returns
+    (F_A(alpha_n), F_B(alpha_n)) stacked [batch, n_total, ., .] — the
+    index-based block scatter replaces _block_stack_a/_b.
+    """
+    batch, k, ma = a.shape
+    mb = b.shape[-1]
+    bra, bca = ma // t, k // s  # F_A coefficient block
+    brb, bcb = k // s, mb // t  # F_B coefficient block
+    k1, k2 = jax.random.split(key, 2)
+
+    at = jnp.swapaxes(a, -1, -2)  # [batch, ma, k]
+    a_blocks = (
+        at.reshape(batch, t, bra, s, bca)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(batch, t * s, bra, bca)
+    )
+    stack_a = jnp.zeros((batch, na, bra, bca), jnp.int32)
+    stack_a = stack_a.at[:, a_pos].set(a_blocks)
+    stack_a = stack_a.at[:, sa_pos].set(random_field_device(k1, (batch, z, bra, bca), p))
+    b_blocks = (
+        b.reshape(batch, s, brb, t, bcb)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(batch, s * t, brb, bcb)
+    )
+    stack_b = jnp.zeros((batch, nb, brb, bcb), jnp.int32)
+    stack_b = stack_b.at[:, b_pos].set(b_blocks)
+    stack_b = stack_b.at[:, sb_pos].set(random_field_device(k2, (batch, z, brb, bcb), p))
+    fa = polyeval(va, stack_a, p=p, backend=backend)  # [batch, n_total, bra, bca]
+    fb = polyeval(vb, stack_b, p=p, backend=backend)
+    return fa, fb
+
+
+def share_batched(
+    plan: CMPCPlan, a: jnp.ndarray, b: jnp.ndarray, key, backend: str = "auto"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sources evaluate a whole batch of share pairs in one jitted call.
+
+    a: [batch, k, ma], b: [batch, k, mb] int32 in [0, p); ``key`` is a
+    JAX PRNG key (secrets are drawn on device).  Entry point for the
+    sharded batched engine and the batched edge runtime.
+    """
+    dp = device_plan(plan)
+    return _share_batched_jit(
+        a, b, key, dp.va, dp.vb, dp.a_pos, dp.sa_pos, dp.b_pos, dp.sb_pos,
+        p=plan.field.p,
+        s=plan.scheme.s,
+        t=plan.scheme.t,
+        z=plan.scheme.z,
+        na=len(plan.scheme.fa_powers),
+        nb=len(plan.scheme.fb_powers),
+        backend=backend,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("p", "t", "backend"))
+def _decode_batched_jit(
+    i_evals: jnp.ndarray,
+    decode_w: jnp.ndarray,
+    ids3: jnp.ndarray,
+    *,
+    p: int,
+    t: int,
+    backend: str,
+) -> jnp.ndarray:
+    """Phase 3 on device: mod_matmul with the int32 decode matrix, then
+    an index-based block gather replaces the ``reconstruct`` loops.
+
+    i_evals: [batch, n_total, bry, bcy]; returns y [batch, ma, mb].
+    """
+    batch, _, bry, bcy = i_evals.shape
+    sel = jnp.take(i_evals, ids3, axis=1).reshape(batch, ids3.shape[0], bry * bcy)
+    coeffs = mod_matmul(decode_w, sel, p=p, backend=backend)
+    # coefficient g = i + t*l of I(x) is output block (row i, col l)
+    y_blocks = coeffs[:, : t * t].reshape(batch, t, t, bry, bcy)  # [b, l, i, ., .]
+    return y_blocks.transpose(0, 2, 3, 1, 4).reshape(batch, t * bry, t * bcy)
+
+
+@functools.partial(
     jax.jit,
-    static_argnames=(
-        "p", "s", "t", "z", "n_workers", "na", "nb", "thr", "backend",
-    ),
+    static_argnames=("p", "s", "t", "z", "n_workers", "na", "nb", "backend"),
 )
 def _run_batched_jit(
     a: jnp.ndarray,
@@ -396,7 +504,6 @@ def _run_batched_jit(
     n_workers: int,
     na: int,
     nb: int,
-    thr: int,
     backend: str,
 ) -> jnp.ndarray:
     """All three protocol phases for a batch of products, on device.
@@ -406,34 +513,18 @@ def _run_batched_jit(
     """
     batch, k, ma = a.shape
     mb = b.shape[-1]
-    bra, bca = ma // t, k // s  # F_A coefficient block
-    brb, bcb = k // s, mb // t  # F_B coefficient block
-    k1, k2, k3 = jax.random.split(key, 3)
+    kshare, k3 = jax.random.split(key, 2)
 
-    # Phase 1 — index-based block scatter replaces _block_stack_a/_b.
-    at = jnp.swapaxes(a, -1, -2)  # [batch, ma, k]
-    a_blocks = (
-        at.reshape(batch, t, bra, s, bca)
-        .transpose(0, 1, 3, 2, 4)
-        .reshape(batch, t * s, bra, bca)
+    # Phase 1 — shared with the sharded engine (inlined under this jit).
+    fa, fb = _share_batched_jit(
+        a, b, kshare, va, vb, a_pos, sa_pos, b_pos, sb_pos,
+        p=p, s=s, t=t, z=z, na=na, nb=nb, backend=backend,
     )
-    stack_a = jnp.zeros((batch, na, bra, bca), jnp.int32)
-    stack_a = stack_a.at[:, a_pos].set(a_blocks)
-    stack_a = stack_a.at[:, sa_pos].set(random_field_device(k1, (batch, z, bra, bca), p))
-    b_blocks = (
-        b.reshape(batch, s, brb, t, bcb)
-        .transpose(0, 1, 3, 2, 4)
-        .reshape(batch, s * t, brb, bcb)
-    )
-    stack_b = jnp.zeros((batch, nb, brb, bcb), jnp.int32)
-    stack_b = stack_b.at[:, b_pos].set(b_blocks)
-    stack_b = stack_b.at[:, sb_pos].set(random_field_device(k2, (batch, z, brb, bcb), p))
-    fa = polyeval(va, stack_a, p=p, backend=backend)  # [batch, n_total, bra, bca]
-    fb = polyeval(vb, stack_b, p=p, backend=backend)
 
     # Phase 2 — worker multiply + dense degree-reduction exchange.
     h = mod_matmul(fa, fb, p=p, backend=backend)  # [batch, n_total, bra, bcb]
-    blk_flat = bra * bcb
+    bry, bcy = ma // t, mb // t
+    blk_flat = bry * bcy
     h_flat = jnp.take(h, ids2, axis=1).reshape(batch, n_workers, blk_flat)
     i_flat = mod_matmul(mix_t, h_flat, p=p, backend=backend)  # [batch, n_total, .]
     # Each Phase-2 worker contributes z blinding matrices R_w^{(n)}, but
@@ -447,14 +538,80 @@ def _run_batched_jit(
         (i_flat.astype(jnp.uint32) + noise.astype(jnp.uint32)) % jnp.uint32(p)
     ).astype(jnp.int32)
 
-    # Phase 3 — decode on device: mod_matmul with the int32 decode_w,
-    # then an index-based block gather replaces the reconstruct loops.
-    sel = jnp.take(i_evals, ids3, axis=1)  # [batch, thr, blk_flat]
-    coeffs = mod_matmul(decode_w, sel, p=p, backend=backend)
-    bry, bcy = ma // t, mb // t
-    # coefficient g = i + t*l of I(x) is output block (row i, col l)
-    y_blocks = coeffs[:, : t * t].reshape(batch, t, t, bry, bcy)  # [b, l, i, ., .]
-    return y_blocks.transpose(0, 2, 3, 1, 4).reshape(batch, ma, mb)
+    # Phase 3 — shared with the sharded engine.
+    return _decode_batched_jit(
+        i_evals.reshape(batch, -1, bry, bcy), decode_w, ids3,
+        p=p, t=t, backend=backend,
+    )
+
+
+def _prep_batched_operands(
+    plan: CMPCPlan, a: np.ndarray, b: np.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Validate and promote operands to int32 [batch, k, m] device arrays."""
+    a = jnp.asarray(np.asarray(a) % plan.field.p, jnp.int32)
+    b = jnp.asarray(np.asarray(b) % plan.field.p, jnp.int32)
+    if a.ndim == 2:
+        a = a[None]
+    if b.ndim == 2:
+        b = b[None]
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"expected [batch, k, m] operands, got {a.shape} {b.shape}")
+    sh = plan.shapes
+    if a.shape[1:] != (sh.k, sh.ma) or b.shape[1:] != (sh.k, sh.mb):
+        raise ValueError(
+            f"operands {a.shape[1:]}/{b.shape[1:]} disagree with plan "
+            f"shapes ({sh.k}, {sh.ma})/({sh.k}, {sh.mb})"
+        )
+    return a, b
+
+
+def batch_trace(
+    plan: CMPCPlan,
+    batch: int = 1,
+    n_receivers: Optional[int] = None,
+    n_responses: Optional[int] = None,
+) -> Trace:
+    """Corollary-12 communication accounting for ``batch`` products.
+
+    Phase 1 provisions every worker (spares included); Phase 2's
+    receivers likewise span all ``n_total`` provisioned workers — spares
+    must receive I(alpha_n) too, since Phase 3 decodes from any of them
+    (each of the ``n_workers`` senders reaches the other n_total - 1).
+    The edge runtime overrides ``n_receivers`` with the *live* pool
+    (dropouts receive nothing) and ``n_responses`` with the responses
+    actually arrived at acceptance; the defaults are the idealized
+    full-pool / threshold counts of the protocol paths.
+    """
+    sh = plan.shapes
+    t = plan.scheme.t
+    blk_y = (sh.ma // t) * (sh.mb // t)
+    if n_receivers is None:
+        n_receivers = plan.n_total
+    if n_responses is None:
+        n_responses = plan.decode_threshold
+    return Trace(
+        phase1_source_to_worker=batch
+        * plan.n_total
+        * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
+        phase2_worker_to_worker=batch * plan.n_workers * (n_receivers - 1) * blk_y,
+        phase3_worker_to_master=batch * n_responses * blk_y,
+        elem_bytes=plan.field.elem_bytes,
+    )
+
+
+def _phase3_device_selection(
+    plan: CMPCPlan, phase3_ids: Optional[Sequence[int]]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(device ids3, device decode matrix) for a responder subset."""
+    dp = device_plan(plan)
+    if phase3_ids is None:
+        return dp.ids3, dp.decode_w
+    ids3_h, decode_w_h = _decode_selection(plan, phase3_ids)
+    return (
+        jnp.asarray(ids3_h.astype(np.int32)),
+        jnp.asarray((decode_w_h % plan.field.p).astype(np.int32)),
+    )
 
 
 def run_batched(
@@ -479,20 +636,7 @@ def run_batched(
 
     Returns (y [batch, ma, mb] int64, Trace for the whole batch).
     """
-    a = jnp.asarray(np.asarray(a) % plan.field.p, jnp.int32)
-    b = jnp.asarray(np.asarray(b) % plan.field.p, jnp.int32)
-    if a.ndim == 2:
-        a = a[None]
-    if b.ndim == 2:
-        b = b[None]
-    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
-        raise ValueError(f"expected [batch, k, m] operands, got {a.shape} {b.shape}")
-    sh = plan.shapes
-    if a.shape[1:] != (sh.k, sh.ma) or b.shape[1:] != (sh.k, sh.mb):
-        raise ValueError(
-            f"operands {a.shape[1:]}/{b.shape[1:]} disagree with plan "
-            f"shapes ({sh.k}, {sh.ma})/({sh.k}, {sh.mb})"
-        )
+    a, b = _prep_batched_operands(plan, a, b)
     dp = device_plan(plan)
     p = plan.field.p
     if phase2_ids is None:
@@ -501,13 +645,7 @@ def run_batched(
     else:
         ids2_h, mix_t = _phase2_selection(plan, phase2_ids)
         ids2 = jnp.asarray(ids2_h.astype(np.int32))
-    if phase3_ids is None:
-        ids3 = dp.ids3
-        decode_w = dp.decode_w
-    else:
-        ids3_h, decode_w_h = _decode_selection(plan, phase3_ids)
-        ids3 = jnp.asarray(ids3_h.astype(np.int32))
-        decode_w = jnp.asarray((decode_w_h % p).astype(np.int32))
+    ids3, decode_w = _phase3_device_selection(plan, phase3_ids)
 
     y = _run_batched_jit(
         a,
@@ -531,25 +669,74 @@ def run_batched(
         n_workers=plan.n_workers,
         na=len(plan.scheme.fa_powers),
         nb=len(plan.scheme.fb_powers),
-        thr=plan.decode_threshold,
         backend=backend,
     )
+    return np.asarray(y, np.int64), batch_trace(plan, int(a.shape[0]))
 
+
+def run_batched_sharded(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    mesh,
+    axis: str = "workers",
+    mode: str = "all_to_all",
+    seed: int = 0,
+    phase2_ids: Optional[Sequence[int]] = None,
+    phase3_ids: Optional[Sequence[int]] = None,
+    backend: str = "auto",
+) -> Tuple[np.ndarray, Trace]:
+    """Batched protocol with the *distributed* Phase 2 on a device mesh.
+
+    Same contract as ``run_batched``, but the degree-reduction exchange
+    is the ``shard_map`` collective of
+    ``repro.core.distributed.run_phase2_sharded`` (``mode`` selects
+    ``all_to_all`` / ``psum`` / ``psum_scatter``): workers live as
+    shards on the ``axis`` mesh axis, each shard multiplies its own
+    shares, and the whole batch rides one collective.  Phases 1 and 3
+    are the same jitted device kernels as ``run_batched``
+    (``_share_batched_jit`` / ``_decode_batched_jit``).
+
+    ``phase2_ids`` is the Phase-2 sender subset (e.g. the fastest
+    ``n_workers`` picked by the edge scheduler) and routes through the
+    plan's cached subset mix matrices; ``phase3_ids`` is the responder
+    subset for the decode.  Unlike ``run_batched``'s summed-blinding
+    shortcut, the exchange keeps faithful *per-worker* blinding draws
+    R_w^{(n)} — they are sharded with their workers.
+
+    Returns (y [batch, ma, mb] int64, Trace for the whole batch).
+    """
+    from .distributed import run_phase2_sharded  # local: avoid cycle
+
+    a, b = _prep_batched_operands(plan, a, b)
+    p = plan.field.p
     batch = int(a.shape[0])
+    kshare, knoise = jax.random.split(jax.random.PRNGKey(seed), 2)
+    fa, fb = share_batched(plan, a, b, kshare, backend=backend)
+
     n = plan.n_workers
-    t = plan.scheme.t
-    trace = Trace(
-        phase1_source_to_worker=batch
-        * plan.n_total
-        * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
-        phase2_worker_to_worker=batch * n * (n - 1) * (sh.ma // t) * (sh.mb // t),
-        phase3_worker_to_master=batch
-        * plan.decode_threshold
-        * (sh.ma // t)
-        * (sh.mb // t),
-        elem_bytes=plan.field.elem_bytes,
+    blk_y = plan.shapes.blk_y
+    noise = np.asarray(
+        random_field_device(knoise, (batch, n, plan.scheme.z) + blk_y, p)
     )
-    return np.asarray(y, np.int64), trace
+    i_evals = run_phase2_sharded(
+        plan,
+        fa,
+        fb,
+        noise,
+        mesh,
+        axis=axis,
+        mode=mode,
+        matmul_backend=backend,
+        worker_ids=None if phase2_ids is None else np.asarray(phase2_ids),
+    )  # [batch, n_total, bry, bcy]
+
+    ids3, decode_w = _phase3_device_selection(plan, phase3_ids)
+    y = _decode_batched_jit(
+        jnp.asarray(i_evals), decode_w, ids3,
+        p=p, t=plan.scheme.t, backend=backend,
+    )
+    return np.asarray(y, np.int64), batch_trace(plan, batch)
 
 
 # ----------------------------------------------------------------------
@@ -570,15 +757,4 @@ def run(
     h = worker_multiply(plan, fa, fb)
     i_evals = degree_reduce(plan, h, rng, worker_ids=phase2_ids)
     y = reconstruct(plan, i_evals, worker_ids=phase3_ids)
-
-    sh = plan.shapes
-    n = plan.n_workers
-    t = plan.scheme.t
-    trace = Trace(
-        phase1_source_to_worker=plan.n_total
-        * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
-        phase2_worker_to_worker=n * (n - 1) * (sh.ma // t) * (sh.mb // t),
-        phase3_worker_to_master=plan.decode_threshold * (sh.ma // t) * (sh.mb // t),
-        elem_bytes=plan.field.elem_bytes,
-    )
-    return y, trace
+    return y, batch_trace(plan, 1)

@@ -15,7 +15,11 @@ setting: heterogeneous, flaky edge workers.
                    ``n_workers`` for Phase 2, decode from the fastest
                    ``decode_threshold`` responders (with consistency
                    verification against extra responders when corruption
-                   is possible),
+                   is possible); ``run_batch_over_pool`` replays a whole
+                   batch of products through one trace — event loop and
+                   decode-subset search amortized across the batch — and
+                   with a mesh drives the real ``shard_map`` Phase-2
+                   exchange from the scheduler's fastest subset,
 * ``metrics``   — per-run timeline, communication (bytes-level
                    ``Trace`` view), effective worker counts and
                    decode-subset statistics, plus aggregation across
@@ -30,5 +34,11 @@ from .pool import (  # noqa: F401
     WorkerTrace,
     sample_trace,
 )
-from .scheduler import DecodeFailure, EdgeRun, run_over_pool  # noqa: F401
+from .scheduler import (  # noqa: F401
+    BatchEdgeRun,
+    DecodeFailure,
+    EdgeRun,
+    run_batch_over_pool,
+    run_over_pool,
+)
 from .metrics import RunMetrics, summarize  # noqa: F401

@@ -39,6 +39,7 @@ class RunMetrics:
     confirmed_by: np.ndarray  # extra responders that verified the decode
     rejected_ids: np.ndarray  # responders detected as corrupt
     trace: Trace  # communication (elements + bytes views)
+    batch: int = 1  # products served by this replay (batched runtime)
 
     @property
     def effective_workers(self) -> int:
@@ -65,6 +66,7 @@ def summarize(runs: List[RunMetrics]) -> Dict:
     top = sorted(subsets.items(), key=lambda kv: -kv[1])[:3]
     return {
         "runs": len(runs),
+        "products": int(sum(r.batch for r in runs)),
         "completion_mean": float(times.mean()),
         "completion_p50": float(np.percentile(times, 50)),
         "completion_p95": float(np.percentile(times, 95)),

@@ -133,6 +133,27 @@ class WorkerTrace:
             }
         )
 
+    def _checked_ids(self, name: str, ids: Sequence[int]) -> np.ndarray:
+        """Validate explicit worker indices against the pool size.
+
+        numpy fancy indexing would silently wrap negatives and raise an
+        opaque IndexError past ``n``; fault placement demands exact
+        worker identities, so reject out-of-range and duplicate ids with
+        a pool-aware error instead.
+        """
+        arr = np.asarray(list(ids), dtype=np.int64)
+        if arr.size == 0:
+            return arr
+        bad = arr[(arr < 0) | (arr >= self.n)]
+        if bad.size:
+            raise ValueError(
+                f"{name} indices {bad.tolist()} out of range for a pool "
+                f"of {self.n} workers (need 0 <= id < {self.n})"
+            )
+        if np.unique(arr).size != arr.size:
+            raise ValueError(f"{name} contains duplicate worker indices: {arr.tolist()}")
+        return arr
+
     def with_faults(
         self,
         dropout_ids: Sequence[int] = (),
@@ -143,10 +164,10 @@ class WorkerTrace:
     ) -> "WorkerTrace":
         """Deterministic fault placement on explicit worker indices."""
         out = {f.name: getattr(self, f.name).copy() for f in dataclasses.fields(self)}
-        out["dropout"][list(dropout_ids)] = True
-        out["crash_after_phase2"][list(crash_ids)] = True
-        out["corrupt"][list(corrupt_ids)] = True
-        sl = list(straggler_ids)
+        out["dropout"][self._checked_ids("dropout_ids", dropout_ids)] = True
+        out["crash_after_phase2"][self._checked_ids("crash_ids", crash_ids)] = True
+        out["corrupt"][self._checked_ids("corrupt_ids", corrupt_ids)] = True
+        sl = self._checked_ids("straggler_ids", straggler_ids)
         out["compute_delay"][sl] = out["compute_delay"][sl] * straggler_slowdown
         return WorkerTrace(**out)._disjoint()
 

@@ -26,20 +26,41 @@ nor falsely confirm a clean one; mismatching responders are reported as
 detected-corrupt.  ``verify_extras="auto"`` enables one confirmation
 exactly when the trace can contain corruption.
 
+Two replay entry points share ONE event loop (``_replay_events``):
+
+* ``run_over_pool``        — per-product reference (numpy-rng share
+                              path, dense Phase-2 simulation),
+* ``run_batch_over_pool``  — a whole batch of products through one
+                              trace: shares come from the jitted
+                              batched engine, the batch folds into the
+                              per-worker payload so the event loop,
+                              Phase-2 subset selection, and the
+                              decode-subset search are paid ONCE, and
+                              with ``mesh`` the exchange is the real
+                              ``shard_map`` collective of
+                              ``core.distributed`` driven by the
+                              scheduler's fastest-subset ``worker_ids``.
+
 The numeric path stays on the device-resident protocol ops
-(``share_a/b``, ``worker_multiply``, ``degree_reduce``); the event loop
-only decides subsets and timestamps.
+(``share_a/b``, ``worker_multiply``, ``degree_reduce``,
+``share_batched``, ``run_phase2_sharded``); the event loop only decides
+subsets and timestamps — which is what makes the batch fold sound: the
+timeline depends on the trace alone, and a corrupt worker is corrupt
+for every product it serves.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import protocol as proto
+from ..core.distributed import run_phase2_sharded
 from ..core.planner import CMPCPlan
 from .metrics import RunMetrics
 from .pool import WorkerTrace
@@ -57,6 +78,23 @@ class EdgeRun:
     metrics: RunMetrics
 
 
+@dataclasses.dataclass
+class BatchEdgeRun:
+    """Result of one batched execution over the pool.
+
+    One event-loop replay served every product: ``per_product`` metrics
+    share the timeline and subsets, differing only in the (per-product)
+    communication trace; ``metrics`` carries the whole-batch trace.
+    The subset id arrays (``phase2_ids``, ``responder_ids``, ...) are
+    shared views across entries and the aggregate — treat them as
+    read-only.
+    """
+
+    y: np.ndarray  # [batch, ma, mb]
+    metrics: RunMetrics  # aggregate (batch-level comm accounting)
+    per_product: List[RunMetrics]
+
+
 # Bound on per-event decode-subset search when hunting for a confirmable
 # subset among corrupt responses; the search resumes at the next arrival.
 # Half the budget goes to the deterministic colex front (fastest-first),
@@ -65,50 +103,60 @@ class EdgeRun:
 _MAX_SUBSET_TRIES = 128
 
 
-def run_over_pool(
-    plan: CMPCPlan,
-    a: np.ndarray,
-    b: np.ndarray,
-    trace: WorkerTrace,
-    seed: int = 0,
-    verify_extras="auto",
-    master_decode_cost: float = 0.0,
-) -> EdgeRun:
-    """Execute Y = A^T B over the simulated pool described by ``trace``.
+@dataclasses.dataclass
+class _Replay:
+    """Everything the event loop decided for one trace replay."""
 
-    Returns the decoded product and the run's :class:`RunMetrics`.
-    Raises :class:`DecodeFailure` when the surviving pool cannot serve
-    Phase 2 (fewer than ``n_workers`` live workers) or the master never
-    accumulates an acceptable responder subset.
-    """
-    n_total = plan.n_total
-    if trace.n != n_total:
+    coeffs: np.ndarray  # [thr, payload] interpolated I(x) coefficients
+    phase2_ids: np.ndarray
+    responder_ids: np.ndarray
+    confirmed_by: np.ndarray
+    rejected_ids: np.ndarray
+    phase1_last: float
+    phase2_set_time: float
+    first_response: float
+    completion: float
+    n_arrived: int
+
+
+def _check_pool(plan: CMPCPlan, trace: WorkerTrace) -> np.ndarray:
+    """Validate the trace against the plan; returns the alive mask."""
+    if trace.n != plan.n_total:
         raise ValueError(
-            f"trace covers {trace.n} workers, plan provisions {n_total} "
+            f"trace covers {trace.n} workers, plan provisions {plan.n_total} "
             f"({plan.n_workers} + {plan.n_spare} spare)"
         )
-    if verify_extras == "auto":
-        verify_extras = 1 if bool(trace.corrupt.any()) else 0
-    thr = plan.decode_threshold
-    p = plan.field.p
-    rng = np.random.default_rng(seed)
-
     alive = ~trace.dropout
     if int(alive.sum()) < plan.n_workers:
         raise DecodeFailure(
             f"{int(trace.dropout.sum())} dropouts leave "
             f"{int(alive.sum())} live workers < n_workers={plan.n_workers}"
         )
+    return alive
 
-    # Data plane, Phase 1: sources evaluate and ship shares.
-    fa = proto.share_a(plan, a, rng)
-    fb = proto.share_b(plan, b, rng)
-    h = proto.worker_multiply(plan, fa, fb)
 
+def _replay_events(
+    plan: CMPCPlan,
+    trace: WorkerTrace,
+    alive: np.ndarray,
+    compute_i_all: Callable[[np.ndarray], np.ndarray],
+    verify_extras: int,
+    rng: np.random.Generator,
+    master_decode_cost: float,
+) -> _Replay:
+    """The shared event loop: timestamps, subsets, and the decode search.
+
+    ``compute_i_all(phase2_ids)`` supplies the numeric Phase-2 result as
+    an ``[n_total, ...]`` worker-stacked array (any trailing payload
+    shape — the batched runtime folds its whole batch in there);
+    corruption is injected here so every caller gets identical fault
+    semantics.
+    """
+    p = plan.field.p
     share_at = trace.share_delay
     phase1_last = float(share_at[alive].max())
 
-    # Event loop.  Heap entries: (time, seq, kind, worker).
+    # Heap entries: (time, seq, kind, worker).
     events: list = []
     seq = itertools.count()
     for w in np.flatnonzero(alive):
@@ -140,13 +188,13 @@ def run_over_pool(
             phase2_set_time = t_now
             # np.array (not asarray): device outputs are read-only views
             # and corrupt rows are overwritten below.
-            i_all = np.array(
-                proto.degree_reduce(plan, h, rng, worker_ids=phase2_ids)
-            )
-            # Corrupt workers respond with garbage of the right shape.
+            i_all = np.array(compute_i_all(phase2_ids))
+            # Corrupt workers respond with garbage of the right shape
+            # (garbage spans their whole payload — every product of a
+            # batched replay sees the same worker corrupt).
             for c in np.flatnonzero(trace.corrupt & alive):
                 i_all[c] = rng.integers(0, p, size=i_all[c].shape, dtype=np.int64)
-            vander_check = plan.field.vandermonde(plan.alphas, range(thr))
+            vander_check = plan.decode_check_matrix()
             # Live, non-crashed workers respond one exchange + uplink
             # delay after the set is announced.
             for r in np.flatnonzero(alive & ~trace.crash_after_phase2):
@@ -165,7 +213,7 @@ def run_over_pool(
         if not arrived:
             first_response = t_now
         arrived.append((t_now, w))
-        if len(arrived) < thr + verify_extras:
+        if len(arrived) < plan.decode_threshold + verify_extras:
             continue
         accepted = _try_decode(
             plan, i_all, arrived, verify_extras, vander_check, rng, decode_cache
@@ -173,44 +221,202 @@ def run_over_pool(
         if accepted is None:
             continue
         coeffs, responder_ids, confirmed_by, rejected = accepted
-        y = proto.assemble_y(plan, coeffs)
-        completion = t_now + master_decode_cost
-        # crash-after-phase-2 workers fully serve the exchange (they
-        # only skip the Phase-3 report), so they count as receivers
-        n_recv = int(alive.sum())
-        sh = plan.shapes
-        t = plan.scheme.t
-        blk_y = (sh.ma // t) * (sh.mb // t)
-        comm = proto.Trace(
-            phase1_source_to_worker=n_total
-            * (sh.blk_a[0] * sh.blk_a[1] + sh.blk_b[0] * sh.blk_b[1]),
-            phase2_worker_to_worker=plan.n_workers * (n_recv - 1) * blk_y,
-            phase3_worker_to_master=len(arrived) * blk_y,
-            elem_bytes=plan.field.elem_bytes,
-        )
-        metrics = RunMetrics(
-            completion_time=float(completion),
-            phase1_last_share=phase1_last,
-            phase2_set_time=phase2_set_time,
-            first_response=float(first_response),
-            n_provisioned=n_total,
-            n_dropped=int(trace.dropout.sum()),
-            n_crashed=int((trace.crash_after_phase2 & alive).sum()),
+        return _Replay(
+            coeffs=coeffs,
             phase2_ids=phase2_ids,
             responder_ids=responder_ids,
             confirmed_by=confirmed_by,
             rejected_ids=rejected,
-            trace=comm,
+            phase1_last=phase1_last,
+            phase2_set_time=phase2_set_time,
+            first_response=float(first_response),
+            completion=float(t_now + master_decode_cost),
+            n_arrived=len(arrived),
         )
-        return EdgeRun(y=y, metrics=metrics)
 
     raise DecodeFailure(
         f"events exhausted before an acceptable decode: {len(arrived)} "
-        f"responses arrived, need {thr} + {verify_extras} confirmations "
-        f"(threshold {thr}); dropouts={int(trace.dropout.sum())}, "
+        f"responses arrived, need {plan.decode_threshold} + {verify_extras} "
+        f"confirmations (threshold {plan.decode_threshold}); "
+        f"dropouts={int(trace.dropout.sum())}, "
         f"crashed={int((trace.crash_after_phase2 & alive).sum())}, "
         f"corrupt={int((trace.corrupt & alive).sum())}"
     )
+
+
+def _comm_trace(
+    plan: CMPCPlan, n_recv: int, n_arrived: int, batch: int = 1
+) -> proto.Trace:
+    """Runtime communication accounting for one replay.
+
+    Delegates to ``protocol.batch_trace`` (ONE home for the
+    Corollary-12 formulas), overriding Phase 2's receivers with the
+    *live* pool (crashed-after-phase-2 workers fully serve the
+    exchange; dropouts receive nothing) and Phase 3 with the responses
+    that actually arrived at acceptance.
+    """
+    return proto.batch_trace(
+        plan, batch, n_receivers=n_recv, n_responses=n_arrived
+    )
+
+
+def _build_metrics(
+    plan: CMPCPlan,
+    trace: WorkerTrace,
+    alive: np.ndarray,
+    res: _Replay,
+    batch: int = 1,
+) -> RunMetrics:
+    # crash-after-phase-2 workers fully serve the exchange (they only
+    # skip the Phase-3 report), so they count as receivers
+    n_recv = int(alive.sum())
+    return RunMetrics(
+        completion_time=res.completion,
+        phase1_last_share=res.phase1_last,
+        phase2_set_time=res.phase2_set_time,
+        first_response=res.first_response,
+        n_provisioned=plan.n_total,
+        n_dropped=int(trace.dropout.sum()),
+        n_crashed=int((trace.crash_after_phase2 & alive).sum()),
+        phase2_ids=res.phase2_ids,
+        responder_ids=res.responder_ids,
+        confirmed_by=res.confirmed_by,
+        rejected_ids=res.rejected_ids,
+        trace=_comm_trace(plan, n_recv, res.n_arrived, batch),
+        batch=batch,
+    )
+
+
+def _resolve_verify_extras(verify_extras, trace: WorkerTrace) -> int:
+    if verify_extras == "auto":
+        return 1 if bool(trace.corrupt.any()) else 0
+    return int(verify_extras)
+
+
+def run_over_pool(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    trace: WorkerTrace,
+    seed: int = 0,
+    verify_extras="auto",
+    master_decode_cost: float = 0.0,
+) -> EdgeRun:
+    """Execute Y = A^T B over the simulated pool described by ``trace``.
+
+    Returns the decoded product and the run's :class:`RunMetrics`.
+    Raises :class:`DecodeFailure` when the surviving pool cannot serve
+    Phase 2 (fewer than ``n_workers`` live workers) or the master never
+    accumulates an acceptable responder subset.
+    """
+    alive = _check_pool(plan, trace)
+    verify_extras = _resolve_verify_extras(verify_extras, trace)
+    rng = np.random.default_rng(seed)
+
+    # Data plane, Phase 1: sources evaluate and ship shares.
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    h = proto.worker_multiply(plan, fa, fb)
+
+    def compute_i_all(phase2_ids: np.ndarray) -> np.ndarray:
+        return proto.degree_reduce(plan, h, rng, worker_ids=phase2_ids)
+
+    res = _replay_events(
+        plan, trace, alive, compute_i_all, verify_extras, rng, master_decode_cost
+    )
+    y = proto.assemble_y(plan, res.coeffs)
+    return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
+
+
+def run_batch_over_pool(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    trace: WorkerTrace,
+    seed: int = 0,
+    verify_extras="auto",
+    master_decode_cost: float = 0.0,
+    mesh=None,
+    axis: str = "workers",
+    mode: str = "all_to_all",
+    backend: str = "auto",
+) -> BatchEdgeRun:
+    """Replay a whole batch of products through ONE worker trace.
+
+    a: [batch, k, ma], b: [batch, k, mb] (2D operands promote to batch
+    1).  The event loop, Phase-2 fastest-subset barrier, and the
+    decode-subset search run once for the whole batch: products fold
+    into each worker's payload, which is sound because the timeline
+    depends only on the trace, and a corrupt/crashed/dropped worker is
+    faulty for every product it touches.  Shares and decode run on the
+    batched device engine (``share_batched`` / jitted decode path).
+
+    With ``mesh`` the Phase-2 exchange is the real ``shard_map``
+    collective (``core.distributed.run_phase2_sharded``, ``mode`` one of
+    ``all_to_all`` / ``psum`` / ``psum_scatter``) driven by the
+    scheduler's fastest-subset ``worker_ids`` — the edge runtime and the
+    distributed data plane composed end to end.  Without it, Phase 2 is
+    the dense single-host simulation (``degree_reduce``).
+
+    Returns :class:`BatchEdgeRun`; raises :class:`DecodeFailure` exactly
+    like ``run_over_pool``.
+    """
+    alive = _check_pool(plan, trace)
+    verify_extras = _resolve_verify_extras(verify_extras, trace)
+    rng = np.random.default_rng(seed)
+
+    a_j, b_j = proto._prep_batched_operands(plan, a, b)
+    batch = int(a_j.shape[0])
+    bry, bcy = plan.shapes.blk_y
+    fa, fb = proto.share_batched(
+        plan, a_j, b_j, jax.random.PRNGKey(seed), backend=backend
+    )
+
+    def compute_i_all(phase2_ids: np.ndarray) -> np.ndarray:
+        if mesh is not None:
+            # Faithful distributed exchange: per-worker blinding draws,
+            # whole batch on one collective, sender subset = the
+            # scheduler's fastest n_workers.
+            noise = plan.field.random(
+                rng, (batch, plan.n_workers, plan.scheme.z, bry, bcy)
+            )
+            i_b = run_phase2_sharded(
+                plan, fa, fb, noise, mesh,
+                axis=axis, mode=mode, matmul_backend=backend,
+                worker_ids=phase2_ids,
+            )  # [batch, n_total, bry, bcy]
+            return np.moveaxis(np.asarray(i_b), 1, 0).reshape(
+                plan.n_total, batch * bry, bcy
+            )
+        # Dense simulation: fold the batch into the block rows so the
+        # existing degree-reduction matmul serves every product at once.
+        h = proto.worker_multiply(plan, fa, fb)  # [batch, n_total, bry, bcy]
+        h_w = jnp.moveaxis(h, 0, 1).reshape(plan.n_total, batch * bry, bcy)
+        return proto.degree_reduce(plan, h_w, rng, worker_ids=phase2_ids)
+
+    res = _replay_events(
+        plan, trace, alive, compute_i_all, verify_extras, rng, master_decode_cost
+    )
+
+    # Per-product assembly: the interpolated coefficients carry the
+    # batch in their payload; unfold and lay out every Y at once (the
+    # batched mirror of ``assemble_y``).
+    t = plan.scheme.t
+    sh = plan.shapes
+    blocks = res.coeffs.reshape(-1, batch, bry, bcy)[: t * t].reshape(
+        t, t, batch, bry, bcy
+    )  # [l, i, b, ., .]
+    y = blocks.transpose(2, 1, 3, 0, 4).reshape(batch, sh.ma, sh.mb)
+
+    aggregate = _build_metrics(plan, trace, alive, res, batch=batch)
+    # one replay served every product, so the per-product metrics are
+    # identical by construction: build once, then give each entry its
+    # own object (the subset id arrays stay shared read-only views)
+    first = _build_metrics(plan, trace, alive, res, batch=1)
+    per_product = [first] + [
+        dataclasses.replace(first) for _ in range(batch - 1)
+    ]
+    return BatchEdgeRun(y=y, metrics=aggregate, per_product=per_product)
 
 
 def _candidate_subsets(k: int, thr: int, rng: np.random.Generator):

@@ -53,6 +53,81 @@ def test_cmpc_shard_map_all_modes():
     assert "OK" in out
 
 
+def test_batched_sharded_equivalence_all_modes():
+    """run_batched_sharded == run_batched == host oracle on a REAL
+    multi-device mesh, for every exchange mode and a non-trivial
+    Phase-2 sender subset (n_total = 23 over 8 devices also exercises
+    the pad-worker path: npad = 24, one receive-only pad worker)."""
+    out = _run(
+        """
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import constructions as C, protocol as proto
+        from repro.core.planner import BlockShapes, make_plan
+        from repro.core.gf import Field
+
+        f = Field(); rng = np.random.default_rng(7)
+        mesh = Mesh(np.array(jax.devices()), ("workers",))
+        sch = C.build_scheme("age", 2, 2, 2)
+        shapes = BlockShapes(k=8, ma=12, mb=4, s=2, t=2)
+        plan = make_plan(sch, shapes, n_spare=3, seed=1)
+        batch = 3
+        A = f.random(rng, (batch, 8, 12)); B = f.random(rng, (batch, 8, 4))
+        want = np.stack([f.matmul(A[i].T, B[i]) for i in range(batch)])
+        y_ref, tr_ref = proto.run_batched(plan, A, B, seed=2)
+        assert np.array_equal(y_ref, want)
+        ids2 = np.array([i for i in range(plan.n_total) if i not in (0, 2)])
+        ids2 = ids2[: plan.n_workers]
+        ids3 = np.arange(2, 2 + plan.decode_threshold)
+        for mode in ("all_to_all", "psum", "psum_scatter"):
+            y, tr = proto.run_batched_sharded(plan, A, B, mesh, mode=mode, seed=2)
+            assert np.array_equal(y, y_ref), mode
+            assert tr.total == tr_ref.total, mode
+            ys, _ = proto.run_batched_sharded(
+                plan, A, B, mesh, mode=mode, seed=4,
+                phase2_ids=ids2, phase3_ids=ids3)
+            assert np.array_equal(ys, want), ("subset", mode)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_batch_over_pool_drives_sharded_phase2():
+    """The edge scheduler's fastest-subset selection must drive the
+    shard_map exchange end to end on a multi-device mesh, with the
+    whole batch riding one collective."""
+    out = _run(
+        """
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import constructions as C
+        from repro.core.gf import Field
+        from repro.core.planner import BlockShapes, make_plan
+        from repro.runtime import Deterministic, run_batch_over_pool, sample_trace
+
+        f = Field(); rng = np.random.default_rng(0)
+        sch = C.build_scheme("age", 2, 2, 2)
+        shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+        plan = make_plan(sch, shapes, n_spare=3, seed=1)
+        batch = 4
+        A = f.random(rng, (batch, 8, 8)); B = f.random(rng, (batch, 8, 4))
+        want = np.stack([f.matmul(A[i].T, B[i]) for i in range(batch)])
+        mesh = Mesh(np.array(jax.devices()), ("workers",))
+        # stragglers force a non-prefix Phase-2 subset through the mesh
+        trace = sample_trace(plan.n_total, Deterministic(1.0), seed=2).with_faults(
+            straggler_ids=[0, 5], straggler_slowdown=100.0)
+        for mode in ("all_to_all", "psum_scatter"):
+            res = run_batch_over_pool(plan, A, B, trace, seed=3, mesh=mesh, mode=mode)
+            assert np.array_equal(res.y, want), mode
+            assert not {0, 5} & set(res.metrics.phase2_ids.tolist()), mode
+            assert res.metrics.batch == batch
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
 def test_data_parallel_grads_match_single_device():
     out = _run(
         """

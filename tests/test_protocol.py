@@ -40,9 +40,15 @@ def test_end_to_end(method, s, t, z, field):
     b = field.random(rng, (shapes.k, shapes.mb))
     y, trace = proto.run(plan, a, b, seed=3)
     assert np.array_equal(y, field.matmul(a.T, b))
-    # Corollary 12 accounting
+    # Corollary 12 accounting: each of the n_workers senders reaches the
+    # other n_total - 1 provisioned workers (== n_workers - 1 here since
+    # these plans carry no spares; the spare-inclusive case is covered
+    # in test_runtime's trace-match test).
     n = plan.n_workers
-    assert trace.phase2_worker_to_worker == n * (n - 1) * (shapes.ma // t) * (shapes.mb // t)
+    assert plan.n_total == n
+    assert trace.phase2_worker_to_worker == n * (plan.n_total - 1) * (
+        shapes.ma // t
+    ) * (shapes.mb // t)
 
 
 def test_coded_only_decode(field):

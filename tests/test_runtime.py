@@ -15,6 +15,7 @@ from repro.runtime import (
     FaultSpec,
     HeavyTail,
     ShiftedExponential,
+    run_batch_over_pool,
     run_over_pool,
     sample_trace,
     summarize,
@@ -195,6 +196,145 @@ def test_sharded_phase2_worker_subset(setup):
         plan, i_evals, worker_ids=np.arange(2, 2 + plan.decode_threshold)
     )
     assert np.array_equal(y, want)
+
+
+def test_run_trace_matches_pool_trace_with_spares(setup):
+    """Corollary-12 accounting: on a no-fault deterministic trace with
+    n_spare > 0, ``protocol.run``'s Trace must equal the scheduler's —
+    spares receive Phase-2 I(alpha_n) too (Phase 3 may decode from any
+    provisioned worker), so both count n_workers * (n_total - 1)
+    receivers, not n_workers * (n_workers - 1)."""
+    plan, a, b, _ = setup
+    assert plan.n_spare > 0
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=33)
+    pool_tr = run_over_pool(plan, a, b, trace, seed=34).metrics.trace
+    from repro.core import protocol as proto
+
+    _, run_tr = proto.run(plan, a, b, seed=0)
+    assert run_tr.phase1_source_to_worker == pool_tr.phase1_source_to_worker
+    assert run_tr.phase2_worker_to_worker == pool_tr.phase2_worker_to_worker
+    assert run_tr.phase3_worker_to_master == pool_tr.phase3_worker_to_master
+    assert run_tr.total_bytes == pool_tr.total_bytes
+    # and the explicit formula, so a regression is loud
+    sh = plan.shapes
+    blk_y = (sh.ma // plan.scheme.t) * (sh.mb // plan.scheme.t)
+    assert (
+        run_tr.phase2_worker_to_worker
+        == plan.n_workers * (plan.n_total - 1) * blk_y
+    )
+
+
+# ----------------------------------------------------------------------
+# batched replay (run_batch_over_pool)
+# ----------------------------------------------------------------------
+def _batch_operands(plan, batch, seed=0):
+    field = Field()
+    rng = np.random.default_rng(seed)
+    sh = plan.shapes
+    a = field.random(rng, (batch, sh.k, sh.ma))
+    b = field.random(rng, (batch, sh.k, sh.mb))
+    want = np.stack([field.matmul(a[i].T, b[i]) for i in range(batch)])
+    return a, b, want
+
+
+def test_batch_over_pool_matches_oracle_and_timeline(setup):
+    """One replay serves the whole batch: every product decodes to the
+    oracle, the timeline equals the per-product run's, and the
+    aggregate comm trace is batch x the per-product trace."""
+    plan, a1, b1, _ = setup
+    batch = 4
+    a, b, want = _batch_operands(plan, batch, seed=21)
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=22)
+    res = run_batch_over_pool(plan, a, b, trace, seed=23)
+    assert np.array_equal(res.y, want)
+    assert res.metrics.batch == batch
+    assert len(res.per_product) == batch
+    single = run_over_pool(plan, a1, b1, trace, seed=23)
+    assert res.metrics.completion_time == pytest.approx(
+        single.metrics.completion_time
+    )
+    assert np.array_equal(res.metrics.phase2_ids, single.metrics.phase2_ids)
+    assert res.metrics.trace.total == batch * res.per_product[0].trace.total
+    assert res.per_product[0].trace.total == single.metrics.trace.total
+
+
+def test_batch_over_pool_faults(setup):
+    """Stragglers, dropouts, and a corrupt responder behave identically
+    under the batched replay (faults are per-worker, not per-product)."""
+    plan, _, _, _ = setup
+    a, b, want = _batch_operands(plan, 3, seed=24)
+    drop = list(range(plan.n_spare))
+    trace = sample_trace(
+        plan.n_total, ShiftedExponential(1.0, 0.3), seed=25
+    ).with_faults(dropout_ids=drop, corrupt_ids=[plan.n_spare])
+    res = run_batch_over_pool(plan, a, b, trace, seed=26)
+    assert np.array_equal(res.y, want)
+    assert res.metrics.n_dropped == plan.n_spare
+    assert plan.n_spare not in res.metrics.responder_ids
+    used = set(res.metrics.phase2_ids.tolist()) | set(
+        res.metrics.responder_ids.tolist()
+    )
+    assert not set(drop) & used
+    # loud failure past the provisioned tolerance, same as the scalar path
+    bad = sample_trace(plan.n_total, Deterministic(1.0), seed=27).with_faults(
+        dropout_ids=list(range(plan.n_spare + 1))
+    )
+    with pytest.raises(DecodeFailure, match="dropouts"):
+        run_batch_over_pool(plan, a, b, bad, seed=28)
+
+
+def test_batch_over_pool_sharded_mesh(setup):
+    """mesh= routes the batched replay's Phase 2 through the shard_map
+    exchange, driven by the scheduler's fastest subset."""
+    import jax
+    from jax.sharding import Mesh
+
+    plan, _, _, _ = setup
+    a, b, want = _batch_operands(plan, 3, seed=29)
+    mesh = Mesh(np.array(jax.devices()), ("workers",))
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=30).with_faults(
+        straggler_ids=[1], straggler_slowdown=50.0
+    )
+    for mode in ("all_to_all", "psum", "psum_scatter"):
+        res = run_batch_over_pool(plan, a, b, trace, seed=31, mesh=mesh, mode=mode)
+        assert np.array_equal(res.y, want), mode
+        assert 1 not in res.metrics.phase2_ids
+
+
+def test_batch_over_pool_2d_promotion(setup):
+    plan, a, b, want = setup
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=32)
+    res = run_batch_over_pool(plan, a, b, trace, seed=33)
+    assert res.y.shape == (1,) + want.shape
+    assert np.array_equal(res.y[0], want)
+    assert res.metrics.batch == 1
+
+
+# ----------------------------------------------------------------------
+# with_faults id validation
+# ----------------------------------------------------------------------
+def test_with_faults_empty_lists_noop():
+    trace = sample_trace(10, Deterministic(1.0), seed=35)
+    same = trace.with_faults()
+    assert not same.dropout.any() and not same.corrupt.any()
+    assert np.array_equal(same.compute_delay, trace.compute_delay)
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        {"dropout_ids": [-1]},
+        {"crash_ids": [10]},
+        {"corrupt_ids": [3, 3]},
+        {"straggler_ids": [0, -2]},
+    ],
+)
+def test_with_faults_rejects_bad_ids(kwargs):
+    """Out-of-range / duplicate ids must fail loudly — numpy fancy
+    indexing would silently wrap the negatives onto real workers."""
+    trace = sample_trace(10, Deterministic(1.0), seed=36)
+    with pytest.raises(ValueError, match="indices|duplicate"):
+        trace.with_faults(**kwargs)
 
 
 def test_summarize(setup):

@@ -122,3 +122,21 @@ def test_subset_matrices_cached():
     assert planner.subset_cache_info()["misses"] == info2["misses"]
     # phase-2 prefix likewise returns the precomputed matrix
     assert plan.phase2_matrix_cached(np.arange(plan.n_workers)) is plan.mix
+
+
+def test_decode_check_matrix_cached():
+    """The master's consistency-check Vandermonde is built once per plan
+    (it used to be rebuilt inside every ``run_over_pool`` replay) and
+    matches the direct construction."""
+    plan, i_evals, want = _one_execution("age", 2, 2, 2, 2, 11)
+    v1 = plan.decode_check_matrix()
+    v2 = plan.decode_check_matrix()
+    assert v1 is v2  # memoized on the plan, not rebuilt
+    direct = plan.field.vandermonde(plan.alphas, range(plan.decode_threshold))
+    assert np.array_equal(v1, direct)
+    assert v1.shape == (plan.n_total, plan.decode_threshold)
+    # it predicts every worker's I(alpha_n) from the true coefficients
+    thr = plan.decode_threshold
+    flat = np.asarray(i_evals).reshape(plan.n_total, -1)
+    coeffs = plan.field.matmul(plan.decode_w, flat[:thr])
+    assert np.array_equal(plan.field.matmul(v1, coeffs), flat)
