@@ -3,7 +3,7 @@
 
 PYTHON ?= python
 
-.PHONY: test test-fast bench bench-json bench-edge quickstart
+.PHONY: test test-fast bench bench-json bench-edge quickstart docs-check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -26,3 +26,7 @@ bench-edge:
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py
+
+# Verify every relative link in README.md and docs/*.md resolves.
+docs-check:
+	$(PYTHON) tools/check_doc_links.py

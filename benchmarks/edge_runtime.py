@@ -25,7 +25,7 @@ Scenarios:
                             responder; the master must spend one extra
                             confirmation before accepting a decode.
 
-Two batched sections ride along:
+Four extra sections ride along:
 
 * ``batched_replay``   — ``run_batch_over_pool`` replays a whole batch
                           of products through ONE straggler trace; the
@@ -38,7 +38,19 @@ Two batched sections ride along:
                           scheduler's fastest subset), in a subprocess
                           with ``--xla_force_host_platform_device_count``
                           so the forced device split cannot perturb the
-                          single-device scenario numbers.
+                          single-device scenario numbers,
+* ``per_link``         — link-resolved network models: asymmetric
+                          uplink/downlink (last-mile edge) and a
+                          clustered-edge topology (fast intra-cluster,
+                          slow inter-cluster D2D); Phase-2 completion
+                          becomes the max over each receiver's incoming
+                          links, and both schemes replay byte-identical
+                          ``(sender, receiver)`` delay matrices,
+* ``pipelined``        — ``run_pipeline_over_pool`` keeps K batched
+                          replays in flight with overlapping traces;
+                          reports makespan vs the back-to-back
+                          sequential replays, pipeline occupancy, and
+                          the Phase-1/Phase-2 overlap reclaimed.
 
 Emits ``BENCH_edge.json`` at the repo root (``make bench-edge``) with
 per-scenario completion statistics, worker counts, and the
@@ -57,12 +69,15 @@ from repro.core import constructions as C
 from repro.core.gf import Field
 from repro.core.planner import BlockShapes, get_plan, subset_cache_info
 from repro.runtime import (
+    AsymmetricLinks,
+    ClusteredEdge,
     Deterministic,
     FaultSpec,
     HeavyTail,
     ShiftedExponential,
     run_batch_over_pool,
     run_over_pool,
+    run_pipeline_over_pool,
     sample_trace,
     summarize,
 )
@@ -77,6 +92,120 @@ METHODS = ("polydot", "age")
 # host device count for the sharded child mesh.
 BATCH_REPLAY = 8
 SHARDED_DEVICES = 8
+
+# Pipelined scenario: replays in flight and products per replay.
+PIPELINE_DEPTH = 4
+PIPELINE_BATCH = 4
+
+
+def _per_link_report(plans, field, rng, m, pool, n_runs=8) -> dict:
+    """Link-resolved scenarios: AGE vs PolyDot on identical link draws.
+
+    The legacy scenarios model each worker with one scalar network
+    delay; these sample a full ``(sender, receiver)`` matrix per trace
+    so a receiver's Phase-2 completion is the max over its incoming
+    links.  Both schemes share the pool, so the same trace object
+    serves both — byte-identical links, not just byte-identical
+    workers.
+    """
+    a = field.random(rng, (m, m))
+    b = field.random(rng, (m, m))
+    want = field.matmul(a.T, b)
+    latency = ShiftedExponential(shift=1.0, scale=1.0)
+    networks = {
+        # last-mile edge: Phase-3 responses ride an uplink 5x slower
+        # than the Phase-1 downlink
+        "asymmetric_updown": AsymmetricLinks(
+            latency, down_scale=0.1, d2d_scale=0.1, up_scale=0.5
+        ),
+        # devices hang off 3 access points: D2D inside a cluster is
+        # 10x cheaper than crossing between clusters
+        "clustered_edge": ClusteredEdge(
+            latency, n_clusters=3, intra_scale=0.05, inter_scale=0.5,
+            master_scale=0.1,
+        ),
+    }
+    out = {}
+    for name, network in networks.items():
+        # ONE trace per run, sampled before the method loop: both
+        # schemes replay the identical link matrix by construction,
+        # not by seed coincidence.
+        run_traces = [
+            sample_trace(pool, latency, seed=3000 + run_i, network=network)
+            for run_i in range(n_runs)
+        ]
+        per_method = {}
+        for meth, plan in plans.items():
+            results = []
+            for run_i, trace in enumerate(run_traces):
+                res = run_over_pool(plan, a, b, trace, seed=run_i)
+                if not np.array_equal(res.y, want):
+                    raise AssertionError(
+                        f"{meth}/{name} run {run_i}: link-model decode "
+                        f"disagrees with oracle"
+                    )
+                results.append(res.metrics)
+            agg = summarize(results)
+            agg["n_workers"] = plan.n_workers
+            agg["oracle_validated"] = True
+            per_method[meth] = agg
+        per_method["polydot_over_age_p50"] = round(
+            per_method["polydot"]["completion_p50"]
+            / per_method["age"]["completion_p50"],
+            4,
+        )
+        out[name] = per_method
+    return out
+
+
+def _pipeline_report(plans, field, rng, m, pool) -> dict:
+    """K batched replays in flight vs back-to-back sequential replays.
+
+    Each replay gets its own straggler trace (overlapping traces); the
+    sequential baseline replays the identical traces through
+    ``run_batch_over_pool`` one at a time, so the speedup isolates the
+    pipelining — same subsets, same numerics, every decode of every
+    in-flight replay validated against the host oracle.
+    """
+    K, batch = PIPELINE_DEPTH, PIPELINE_BATCH
+    a = field.random(rng, (K, batch, m, m))
+    b = field.random(rng, (K, batch, m, m))
+    want = np.stack(
+        [
+            np.stack([field.matmul(a[k, i].T, b[k, i]) for i in range(batch)])
+            for k in range(K)
+        ]
+    )
+    latency = ShiftedExponential(shift=1.0, scale=1.0)
+    faults = FaultSpec(straggler_frac=0.2, straggler_slowdown=10.0)
+    traces = [
+        sample_trace(pool, latency, faults, seed=5000 + k) for k in range(K)
+    ]
+    out = {"depth": K, "batch": batch}
+    for meth, plan in plans.items():
+        res = run_pipeline_over_pool(plan, a, b, traces, seed=9)
+        if not np.array_equal(res.y, want):
+            raise AssertionError(f"{meth}: pipelined decode disagrees with oracle")
+        sequential = sum(
+            run_batch_over_pool(plan, a[k], b[k], traces[k], seed=9)
+            .metrics.completion_time
+            for k in range(K)
+        )
+        pm = res.metrics
+        out[meth] = {
+            "makespan": round(pm.makespan, 4),
+            "sequential_completion": round(sequential, 4),
+            "pipeline_speedup": round(sequential / pm.makespan, 4),
+            "occupancy": round(pm.occupancy, 4),
+            "phase1_overlap": round(pm.phase1_overlap, 4),
+            "products": pm.products,
+            "wire_bytes_total": pm.trace.total_bytes,
+            "oracle_validated": True,
+        }
+    out["polydot_over_age_makespan"] = round(
+        out["polydot"]["makespan"] / out["age"]["makespan"], 4
+    )
+    return out
 
 
 def _batched_replay_report(plans, field, rng, m) -> dict:
@@ -284,6 +413,8 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
             - plans["age"].n_workers,
         },
         "scenarios": scenarios,
+        "per_link": _per_link_report(plans, field, rng, m, pool, n_runs=n_runs),
+        "pipelined": _pipeline_report(plans, field, rng, m, pool),
         "batched_replay": _batched_replay_report(plans, field, rng, m),
         "sharded_batched": _sharded_report(),
         "subset_cache": subset_cache_info(),

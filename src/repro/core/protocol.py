@@ -74,6 +74,26 @@ class Trace:
     phase3_worker_to_master: int = 0
     elem_bytes: int = 2  # width of one GF(p) element on the wire
 
+    def __add__(self, other: "Trace") -> "Trace":
+        """Phase-wise sum — aggregate accounting across replays (the
+        pipelined runtime sums one Trace per in-flight replay)."""
+        if not isinstance(other, Trace):
+            return NotImplemented
+        if self.elem_bytes != other.elem_bytes:
+            raise ValueError(
+                f"cannot sum traces with different wire widths "
+                f"({self.elem_bytes} vs {other.elem_bytes} bytes)"
+            )
+        return Trace(
+            phase1_source_to_worker=self.phase1_source_to_worker
+            + other.phase1_source_to_worker,
+            phase2_worker_to_worker=self.phase2_worker_to_worker
+            + other.phase2_worker_to_worker,
+            phase3_worker_to_master=self.phase3_worker_to_master
+            + other.phase3_worker_to_master,
+            elem_bytes=self.elem_bytes,
+        )
+
     @property
     def total(self) -> int:
         return (

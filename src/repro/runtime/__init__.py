@@ -23,14 +23,30 @@ setting: heterogeneous, flaky edge workers.
 * ``metrics``   — per-run timeline, communication (bytes-level
                    ``Trace`` view), effective worker counts and
                    decode-subset statistics, plus aggregation across
-                   runs.
+                   runs,
+* ``pipeline``  — ``run_pipeline_over_pool`` keeps K batched replays
+                   in flight at once with overlapping traces: master
+                   links and worker compute are serial resources, so
+                   replay k+1's Phase-1 transfers overlap replay k's
+                   Phase-2 compute; aggregate ``PipelineMetrics``
+                   report makespan, occupancy, and Phase-1 overlap.
+
+Traces can be link-resolved: ``NetworkModel`` implementations
+(``UniformLinks`` / ``AsymmetricLinks`` / ``ClusteredEdge``) sample a
+per-``(sender, receiver)`` Phase-2 delay matrix plus master up/down
+links, and the scheduler completes a receiver's exchange at the max
+over its *incoming* links.
 """
 from .pool import (  # noqa: F401
+    AsymmetricLinks,
+    ClusteredEdge,
     Deterministic,
     FaultSpec,
     HeavyTail,
     LatencyModel,
+    NetworkModel,
     ShiftedExponential,
+    UniformLinks,
     WorkerTrace,
     sample_trace,
 )
@@ -41,4 +57,5 @@ from .scheduler import (  # noqa: F401
     run_batch_over_pool,
     run_over_pool,
 )
-from .metrics import RunMetrics, summarize  # noqa: F401
+from .metrics import PipelineMetrics, RunMetrics, summarize  # noqa: F401
+from .pipeline import PipelineRun, run_pipeline_over_pool  # noqa: F401

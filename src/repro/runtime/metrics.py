@@ -54,6 +54,36 @@ class RunMetrics:
         return tuple(int(i) for i in np.sort(self.responder_ids))
 
 
+@dataclasses.dataclass
+class PipelineMetrics:
+    """Aggregate view of K pipelined batched replays.
+
+    Per-replay timestamps are *absolute* on the shared pipeline clock
+    (replay k's Phase-1 upload starts once the master's per-worker
+    links free up from replay k-1).  ``occupancy`` is the mean number
+    of in-flight replays over the makespan — sum of per-replay spans
+    divided by the makespan; 1.0 means no overlap at all, values
+    toward ``depth`` mean the pipeline is saturated.
+    ``phase1_overlap`` totals the Phase-1 upload time that ran while
+    an earlier replay was still in flight (the transfer/compute
+    overlap the scalar runtime could not express).
+    """
+
+    depth: int  # replays in flight (K)
+    batch: int  # products per replay
+    products: int  # depth * batch
+    makespan: float  # last replay accepted (absolute)
+    completions: np.ndarray  # [K] absolute acceptance times
+    starts: np.ndarray  # [K] first Phase-1 send of each replay
+    occupancy: float  # mean in-flight replays = sum(span) / makespan
+    phase1_overlap: float  # upload time overlapped with earlier replays
+    trace: Trace  # aggregate communication across all replays
+
+    @property
+    def spans(self) -> np.ndarray:
+        return self.completions - self.starts
+
+
 def summarize(runs: List[RunMetrics]) -> Dict:
     """Aggregate a list of runs into distribution-level statistics."""
     if not runs:

@@ -1,0 +1,240 @@
+"""Pipelined batched replays: K protocol executions in flight at once.
+
+``run_batch_over_pool`` amortizes the event loop across a *batch* of
+products, but successive batches still run back-to-back: replay k+1's
+Phase-1 upload waits for replay k's decode, even though the master's
+links and the workers sit idle for most of that span.  This module
+overlaps them — the ROADMAP's "pipelining many batched replays with
+overlapping traces" item, and its Phase-1/Phase-2 overlap rule is the
+"overlapping Phase-1 transfers with Phase-2 compute" item.
+
+Pipeline timing model (two serial resources, everything else overlaps):
+
+* **master -> worker link**: replay k's share to worker ``w`` starts
+  the moment replay k-1's share to ``w`` has *arrived* (store-and-
+  forward per link; links to different workers are independent), so
+  ``arrive[k, w] = sum_{j <= k} share_delay_j(w)``,
+* **worker compute**: worker ``w`` starts replay k's H(alpha_n) at
+  ``max(arrive[k, w], finish[k-1, w])`` — one multiply at a time;
+  dropped workers never compute, so they release the worker
+  immediately.  A worker *abandons* replay k's compute the moment
+  replay k's Phase-2 set is announced without it: its H(alpha_n) can
+  no longer enter the exchange, so queueing it further would only
+  starve replay k+1 (without cancellation a straggler's stale compute
+  compounds across replays and pipelining can lose to back-to-back
+  execution).
+
+Phases 2 and 3 of each replay proceed independently through the shared
+event loop (``scheduler._replay_events``) with these absolute times
+injected: each in-flight replay fixes its own fastest-``n_workers``
+Phase-2 set, runs its own (link-aware) exchange, and decodes from its
+own fastest responder subset — the fastest-subset/decode-subset
+machinery is reused per replay, per-replay traces may differ (that is
+what "overlapping traces" means), and faults are per-(replay, worker).
+
+The upshot: replay k+1's Phase-1 transfers overlap replay k's Phase-2
+compute whenever ``share_delay`` < completion span, which is exactly
+the edge regime (fast links, slow/heterogeneous compute).  Aggregate
+accounting lands in :class:`~repro.runtime.metrics.PipelineMetrics`
+(makespan, per-replay spans, pipeline occupancy, Phase-1 overlap, and
+the summed communication ``Trace``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import numpy as np
+
+from ..core import protocol as proto
+from ..core.planner import CMPCPlan
+from .metrics import PipelineMetrics, RunMetrics
+from .pool import WorkerTrace
+from .scheduler import (
+    _batched_compute_closure,
+    _build_metrics,
+    _check_pool,
+    _replay_events,
+    _resolve_verify_extras,
+    _unfold_batched_y,
+)
+
+
+@dataclasses.dataclass
+class PipelineRun:
+    """Result of K pipelined batched replays.
+
+    ``y[k]`` is replay k's decoded batch; ``replay_metrics[k]`` its
+    :class:`RunMetrics` on the absolute pipeline clock (batch-level
+    aggregate accounting, like ``BatchEdgeRun.metrics``); ``metrics``
+    the cross-replay :class:`PipelineMetrics`.
+    """
+
+    y: np.ndarray  # [K, batch, ma, mb]
+    replay_metrics: List[RunMetrics]
+    metrics: PipelineMetrics
+
+
+def _prep_pipeline_operands(plan: CMPCPlan, a, b, depth: int):
+    """Promote operands to [K, batch, k, m] and validate against the plan."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.ndim == 3:  # [K, k, m] -> batch-1 replays
+        a = a[:, None]
+    if b.ndim == 3:
+        b = b[:, None]
+    if a.ndim != 4 or b.ndim != 4:
+        raise ValueError(
+            f"expected [K, batch, k, m] operand stacks, got {a.shape} {b.shape}"
+        )
+    if a.shape[0] != depth or b.shape[0] != depth:
+        raise ValueError(
+            f"{depth} traces but operand stacks of depth {a.shape[0]} / "
+            f"{b.shape[0]}"
+        )
+    if a.shape[1] != b.shape[1]:
+        raise ValueError(f"batch mismatch: {a.shape[1]} vs {b.shape[1]}")
+    sh = plan.shapes
+    if a.shape[2:] != (sh.k, sh.ma) or b.shape[2:] != (sh.k, sh.mb):
+        raise ValueError(
+            f"operands {a.shape[2:]}/{b.shape[2:]} disagree with plan "
+            f"shapes ({sh.k}, {sh.ma})/({sh.k}, {sh.mb})"
+        )
+    return a, b
+
+
+def run_pipeline_over_pool(
+    plan: CMPCPlan,
+    a: np.ndarray,
+    b: np.ndarray,
+    traces: Sequence[WorkerTrace],
+    seed: int = 0,
+    verify_extras="auto",
+    master_decode_cost: float = 0.0,
+    mesh=None,
+    axis: str = "workers",
+    mode: str = "all_to_all",
+    backend: str = "auto",
+) -> PipelineRun:
+    """Run K batched replays through the pool with overlapping traces.
+
+    a: [K, batch, k, ma], b: [K, batch, k, mb] ([K, k, m] promotes to
+    batch 1); ``traces`` holds one :class:`WorkerTrace` per replay
+    (they may differ — each replay faces its own latency/fault/link
+    draw).  Replay k+1's Phase-1 upload to each worker starts as soon
+    as that master link is free, so transfers overlap earlier replays'
+    Phase-2 compute; each replay then fixes its own Phase-2 subset and
+    decode subset through the shared event loop.  Per-replay decode
+    failures raise :class:`DecodeFailure` exactly like the standalone
+    entry points.
+
+    Randomness: replay k draws from ``default_rng([seed, k])`` and the
+    folded JAX key, so replays are independent but the whole pipeline
+    is reproducible per seed.
+
+    Returns :class:`PipelineRun` with per-replay results on one
+    absolute clock plus the aggregate :class:`PipelineMetrics`.
+    """
+    depth = len(traces)
+    if depth == 0:
+        raise ValueError("need at least one trace/replay")
+    for k, trace in enumerate(traces):
+        if trace.n != plan.n_total:
+            raise ValueError(
+                f"trace {k} covers {trace.n} workers, plan provisions "
+                f"{plan.n_total}"
+            )
+    a, b = _prep_pipeline_operands(plan, a, b, depth)
+    batch = int(a.shape[1])
+    key = jax.random.PRNGKey(seed)
+
+    n = plan.n_total
+    upload_free = np.zeros(n)  # when the master's link to w frees up
+    worker_free = np.zeros(n)  # when worker w's compute frees up
+
+    ys = []
+    replay_metrics: List[RunMetrics] = []
+    starts = np.zeros(depth)
+    completions = np.zeros(depth)
+    phase1_lasts = np.zeros(depth)
+    agg_trace = None
+
+    for k, trace in enumerate(traces):
+        alive = _check_pool(plan, trace)
+        extras_k = _resolve_verify_extras(verify_extras, trace)
+        rng = np.random.default_rng([seed, k])
+
+        # -- pipeline timing: serialize the master links and compute --
+        starts[k] = float(upload_free.min())
+        arrive = upload_free + trace.share_delay
+        upload_free = arrive.copy()
+        comp_start = np.maximum(arrive, worker_free)
+        finish = np.where(
+            trace.dropout, comp_start, comp_start + trace.compute_delay
+        )
+        # worker_free is updated after the replay: non-set workers
+        # abandon at the Phase-2 announcement (see below).
+
+        # -- numeric path: same batched engine as run_batch_over_pool --
+        a_j, b_j = proto._prep_batched_operands(plan, a[k], b[k])
+        fa, fb = proto.share_batched(
+            plan, a_j, b_j, jax.random.fold_in(key, k), backend=backend
+        )
+        compute_i_all = _batched_compute_closure(
+            plan, fa, fb, rng, batch, mesh, axis, mode, backend
+        )
+        res = _replay_events(
+            plan,
+            trace,
+            alive,
+            compute_i_all,
+            extras_k,
+            rng,
+            master_decode_cost,
+            share_arrival=arrive,
+            compute_finish=finish,
+        )
+        # Straggler cancellation: a worker outside replay k's Phase-2
+        # set abandons its (now useless) H-compute when the set is
+        # announced, freeing it for replay k+1.  Set members finished
+        # at or before the announcement, so they are unaffected.
+        in_set = np.zeros(n, bool)
+        in_set[res.phase2_ids] = True
+        abandoned = ~in_set & ~trace.dropout
+        worker_free = np.where(
+            abandoned,
+            np.minimum(finish, np.maximum(comp_start, res.phase2_set_time)),
+            finish,
+        )
+
+        ys.append(_unfold_batched_y(plan, res.coeffs, batch))
+        m = _build_metrics(plan, trace, alive, res, batch=batch)
+        replay_metrics.append(m)
+        completions[k] = m.completion_time
+        phase1_lasts[k] = m.phase1_last_share
+        agg_trace = m.trace if agg_trace is None else agg_trace + m.trace
+
+    makespan = float(completions.max())
+    spans = completions - starts
+    # Phase-1 upload time of replay k that ran while replay k-1 (or any
+    # earlier one) was still in flight — the overlap the sequential
+    # runtime forgoes entirely.
+    prev_busy_until = np.concatenate(([0.0], np.maximum.accumulate(completions)[:-1]))
+    phase1_overlap = float(
+        np.maximum(0.0, np.minimum(phase1_lasts, prev_busy_until) - starts).sum()
+    )
+    metrics = PipelineMetrics(
+        depth=depth,
+        batch=batch,
+        products=depth * batch,
+        makespan=makespan,
+        completions=completions,
+        starts=starts,
+        occupancy=float(spans.sum() / makespan) if makespan > 0 else 0.0,
+        phase1_overlap=phase1_overlap,
+        trace=agg_trace,
+    )
+    return PipelineRun(
+        y=np.stack(ys), replay_metrics=replay_metrics, metrics=metrics
+    )

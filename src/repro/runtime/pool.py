@@ -32,11 +32,37 @@ counts, e.g. "dropouts up to n_spare"):
 
 Fault flags are made disjoint with priority dropout > crash > corrupt
 (a dropped worker cannot also crash later).
+
+Per-link network models (``NetworkModel``): edge networks are defined
+by heterogeneous *links*, not just heterogeneous workers, so a trace
+can carry link-resolved delays instead of one scalar per worker:
+
+* Phase 1 (master -> worker): the ``share_delay`` vector,
+* Phase 2 (worker <-> worker): a ``link_delay[s, r]`` matrix — the
+  delay of the exchange message from sender ``s`` to receiver ``r``
+  (diagonal 0: a worker's own contribution crosses no link),
+* Phase 3 (worker -> master): the ``uplink_delay`` vector.
+
+``UniformLinks`` draws every link i.i.d., ``AsymmetricLinks`` scales
+the master downlink / uplink / D2D fabrics independently (asymmetric
+uplink is the defining property of last-mile edge connectivity), and
+``ClusteredEdge`` partitions workers into clusters with fast
+intra-cluster and slow inter-cluster links.  When ``link_delay`` is
+``None`` the scheduler falls back to the scalar ``d2d_delay`` —
+replays of existing traces are byte-identical — and ``take`` slices
+the matrix ``[:n, :n]``, so link traces stay prefix-sliceable.
+``with_dropped_links`` marks individual directed links dead
+(infinite delay): a receiver missing an incoming Phase-2 link *from a
+Phase-2 sender* can never finish its I(alpha_n) sum, so it goes
+silent in Phase 3 while still serving as a Phase-2 *sender* —
+strictly weaker than dropping the worker.  A dead link from a worker
+outside the fastest-``n_workers`` sender set has no effect: receivers
+only sum contributions from the senders.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -80,6 +106,107 @@ class HeavyTail(LatencyModel):
 
 
 # ----------------------------------------------------------------------
+# per-link network models
+# ----------------------------------------------------------------------
+class NetworkModel:
+    """Per-link delay sampler for one protocol execution.
+
+    ``sample_links(rng, n)`` returns ``(share, link, uplink)``:
+
+    * ``share[r]``    — master -> worker ``r`` Phase-1 delivery delay,
+    * ``link[s, r]``  — worker ``s`` -> worker ``r`` Phase-2 exchange
+                         delay (diagonal forced to 0),
+    * ``uplink[r]``   — worker ``r`` -> master Phase-3 response delay.
+
+    The draw order is fixed (share, then the row-major link matrix,
+    then uplink), so a seeded trace is reproducible.
+    """
+
+    def sample_links(self, rng: np.random.Generator, n: int):
+        raise NotImplementedError
+
+    @staticmethod
+    def _zero_diag(link: np.ndarray) -> np.ndarray:
+        np.fill_diagonal(link, 0.0)
+        return link
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformLinks(NetworkModel):
+    """Every link i.i.d. from one latency model, uniformly scaled.
+
+    The link-resolved generalization of the legacy scalar sampling: a
+    receiver's Phase-2 completion becomes the max over its incoming
+    links instead of one draw.
+    """
+
+    model: LatencyModel = Deterministic(1.0)
+    scale: float = 0.1
+
+    def sample_links(self, rng, n):
+        share = self.scale * self.model.sample(rng, n)
+        link = self._zero_diag(
+            self.scale * self.model.sample(rng, n * n).reshape(n, n)
+        )
+        uplink = self.scale * self.model.sample(rng, n)
+        return share, link, uplink
+
+
+@dataclasses.dataclass(frozen=True)
+class AsymmetricLinks(NetworkModel):
+    """Asymmetric master downlink / D2D fabric / master uplink.
+
+    Last-mile edge connectivity is uplink-constrained: the Phase-3
+    worker -> master responses ride the slow direction while Phase-1
+    share delivery rides the fast one.  Each direction draws from the
+    same latency model under its own scale.
+    """
+
+    model: LatencyModel = Deterministic(1.0)
+    down_scale: float = 0.1  # master -> worker (Phase-1 shares)
+    d2d_scale: float = 0.1  # worker <-> worker (Phase-2 exchange)
+    up_scale: float = 0.5  # worker -> master (Phase-3 responses)
+
+    def sample_links(self, rng, n):
+        share = self.down_scale * self.model.sample(rng, n)
+        link = self._zero_diag(
+            self.d2d_scale * self.model.sample(rng, n * n).reshape(n, n)
+        )
+        uplink = self.up_scale * self.model.sample(rng, n)
+        return share, link, uplink
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteredEdge(NetworkModel):
+    """Workers in round-robin clusters; inter-cluster links are slow.
+
+    Worker ``w`` belongs to cluster ``w % n_clusters``.  Intra-cluster
+    Phase-2 links scale by ``intra_scale``, inter-cluster by
+    ``inter_scale``; master links (Phase 1 / Phase 3) by
+    ``master_scale``.  Models the paper's edge setting where devices
+    hang off a few access points: D2D within an access point is cheap,
+    crossing between them is not.
+    """
+
+    model: LatencyModel = Deterministic(1.0)
+    n_clusters: int = 2
+    intra_scale: float = 0.05
+    inter_scale: float = 0.5
+    master_scale: float = 0.1
+
+    def sample_links(self, rng, n):
+        share = self.master_scale * self.model.sample(rng, n)
+        raw = self.model.sample(rng, n * n).reshape(n, n)
+        cluster = np.arange(n) % self.n_clusters
+        same = cluster[:, None] == cluster[None, :]
+        link = self._zero_diag(
+            np.where(same, self.intra_scale, self.inter_scale) * raw
+        )
+        uplink = self.master_scale * self.model.sample(rng, n)
+        return share, link, uplink
+
+
+# ----------------------------------------------------------------------
 # fault injection
 # ----------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +238,11 @@ class WorkerTrace:
     dropout: np.ndarray  # bool
     crash_after_phase2: np.ndarray  # bool
     corrupt: np.ndarray  # bool
+    # Optional [n, n] Phase-2 link matrix: link_delay[s, r] is the
+    # sender-s -> receiver-r exchange delay (diagonal 0; np.inf = dead
+    # link).  None = legacy scalar model: every incoming link of
+    # receiver r costs d2d_delay[r].
+    link_delay: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:
@@ -118,20 +250,100 @@ class WorkerTrace:
 
     def __post_init__(self):
         for f in dataclasses.fields(self):
+            if f.name == "link_delay":
+                continue
             arr = getattr(self, f.name)
             if arr.shape != (self.n,):
                 raise ValueError(f"{f.name} must be a [{self.n}] vector")
+        if self.link_delay is not None and self.link_delay.shape != (self.n, self.n):
+            raise ValueError(
+                f"link_delay must be a [{self.n}, {self.n}] matrix, "
+                f"got {self.link_delay.shape}"
+            )
+
+    def _copy_fields(self) -> dict:
+        return {
+            f.name: None
+            if getattr(self, f.name) is None
+            else getattr(self, f.name).copy()
+            for f in dataclasses.fields(self)
+        }
 
     def take(self, n: int) -> "WorkerTrace":
-        """First-n-workers prefix (replay one trace across schemes)."""
+        """First-n-workers prefix (replay one trace across schemes).
+
+        The link matrix slices ``[:n, :n]`` — a prefix pool keeps
+        exactly the sub-fabric among its own workers.
+        """
         if n > self.n:
             raise ValueError(f"trace holds {self.n} workers, need {n}")
-        return WorkerTrace(
-            **{
-                f.name: getattr(self, f.name)[:n].copy()
-                for f in dataclasses.fields(self)
-            }
-        )
+        out = {}
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            if f.name == "link_delay":
+                out[f.name] = None if arr is None else arr[:n, :n].copy()
+            else:
+                out[f.name] = arr[:n].copy()
+        return WorkerTrace(**out)
+
+    def with_link_matrix(self, link: np.ndarray) -> "WorkerTrace":
+        """Attach an explicit [n, n] Phase-2 link matrix.
+
+        Validates the documented invariants beyond the shape check of
+        ``__post_init__``: entries are non-negative and not NaN
+        (``np.inf`` marks a dead link), and the diagonal is 0 — a
+        worker's own contribution crosses no link, so a nonzero
+        diagonal would silently add a phantom self-exchange delay.
+        """
+        link = np.asarray(link, float)
+        if np.isnan(link).any() or (link < 0).any():
+            raise ValueError("link_delay entries must be >= 0 (inf = dead)")
+        if link.ndim == 2 and link.shape[0] == link.shape[1] and (
+            np.diag(link) != 0.0
+        ).any():
+            raise ValueError("link_delay diagonal must be 0 (no self-link)")
+        return dataclasses.replace(self, link_delay=link)
+
+    def with_links(self) -> "WorkerTrace":
+        """Materialize the scalar D2D model as an equivalent link matrix.
+
+        Every incoming link of receiver ``r`` costs ``d2d_delay[r]``
+        (receiver-constant columns, diagonal 0), so a replay is
+        timeline-identical to the scalar trace — the starting point for
+        link-level edits such as ``with_dropped_links``.
+        """
+        link = np.broadcast_to(self.d2d_delay[None, :], (self.n, self.n)).copy()
+        np.fill_diagonal(link, 0.0)
+        return dataclasses.replace(self, link_delay=link)
+
+    def with_dropped_links(
+        self, links: Sequence[Tuple[int, int]]
+    ) -> "WorkerTrace":
+        """Mark directed Phase-2 links (sender, receiver) as dead.
+
+        A dead incoming link from a *Phase-2 sender* starves the
+        receiver's I(alpha_n) sum, so the receiver never responds in
+        Phase 3 — but unlike a dropped *worker* it still computes and
+        serves as a Phase-2 sender itself.  A dead link whose sender
+        ends up outside the fastest-``n_workers`` set is harmless
+        (receivers only sum the senders' contributions), so experiments
+        that need the starvation should check the sender landed in
+        ``RunMetrics.phase2_ids``.  Materializes the link matrix if the
+        trace is still scalar.
+        """
+        base = self if self.link_delay is not None else self.with_links()
+        link = base.link_delay.copy()
+        for s, r in links:
+            s = int(s)
+            r = int(r)
+            if not (0 <= s < self.n and 0 <= r < self.n):
+                raise ValueError(
+                    f"link ({s}, {r}) out of range for a pool of {self.n}"
+                )
+            if s == r:
+                raise ValueError(f"link ({s}, {r}) is a self-loop")
+            link[s, r] = np.inf
+        return dataclasses.replace(base, link_delay=link)
 
     def _checked_ids(self, name: str, ids: Sequence[int]) -> np.ndarray:
         """Validate explicit worker indices against the pool size.
@@ -163,7 +375,7 @@ class WorkerTrace:
         straggler_slowdown: float = 10.0,
     ) -> "WorkerTrace":
         """Deterministic fault placement on explicit worker indices."""
-        out = {f.name: getattr(self, f.name).copy() for f in dataclasses.fields(self)}
+        out = self._copy_fields()
         out["dropout"][self._checked_ids("dropout_ids", dropout_ids)] = True
         out["crash_after_phase2"][self._checked_ids("crash_ids", crash_ids)] = True
         out["corrupt"][self._checked_ids("corrupt_ids", corrupt_ids)] = True
@@ -183,25 +395,39 @@ def sample_trace(
     faults: FaultSpec = NO_FAULTS,
     seed: int = 0,
     net_scale: float = 0.1,
+    network: Optional[NetworkModel] = None,
 ) -> WorkerTrace:
     """Sample one replayable trace for a pool of ``n`` workers.
 
-    ``latency`` drives the compute-time draw; the three network delays
-    (share delivery, D2D exchange, uplink) are independent draws from
-    the same model scaled by ``net_scale`` (edge links are fast relative
-    to compute, but share the same tail shape).
+    ``latency`` drives the compute-time draw.  Without ``network``, the
+    three network delays (share delivery, D2D exchange, uplink) are
+    independent per-worker draws from the same model scaled by
+    ``net_scale`` (edge links are fast relative to compute, but share
+    the same tail shape).  With a ``network`` model the delays are
+    link-resolved instead: ``share_delay`` / ``uplink_delay`` become
+    the master links and the trace carries the full ``link_delay[s, r]``
+    Phase-2 matrix (``net_scale`` is then unused; ``d2d_delay`` is kept
+    as the per-receiver mean of its incoming links — a display summary
+    the scheduler ignores once the matrix is present).
 
-    Draw order is fixed, so two calls with the same seed and ``n`` are
-    identical — but traces of different ``n`` are *not* prefixes of each
-    other; sample once at the largest pool size and ``take`` prefixes
-    when several schemes must see identical worker behaviour.
+    Draw order is fixed, so two calls with the same seed, ``n``, and
+    model arguments are identical — but traces of different ``n`` are
+    *not* prefixes of each other; sample once at the largest pool size
+    and ``take`` prefixes when several schemes must see identical
+    worker (and link) behaviour.
     """
     latency = latency or Deterministic()
     rng = np.random.default_rng(seed)
     compute = latency.sample(rng, n)
-    share = net_scale * latency.sample(rng, n)
-    d2d = net_scale * latency.sample(rng, n)
-    uplink = net_scale * latency.sample(rng, n)
+    if network is None:
+        share = net_scale * latency.sample(rng, n)
+        d2d = net_scale * latency.sample(rng, n)
+        uplink = net_scale * latency.sample(rng, n)
+        link = None
+    else:
+        share, link, uplink = network.sample_links(rng, n)
+        off_diag = link.sum(axis=0) / max(n - 1, 1)  # incoming mean, diag is 0
+        d2d = off_diag
     straggler = rng.random(n) < faults.straggler_frac
     compute = np.where(straggler, compute * faults.straggler_slowdown, compute)
     trace = WorkerTrace(
@@ -212,5 +438,6 @@ def sample_trace(
         dropout=rng.random(n) < faults.dropout_frac,
         crash_after_phase2=rng.random(n) < faults.crash_after_phase2_frac,
         corrupt=rng.random(n) < faults.corrupt_frac,
+        link_delay=link,
     )
     return trace._disjoint()

@@ -11,7 +11,9 @@ module decides *which subset actually does*, by replaying a
 2. the moment the fastest ``n_workers`` workers have finished, the
    Phase-2 set is fixed — exactly the paper's straggler mitigation:
    spares keep primaries from gating the exchange — and every live
-   worker receives its summed I(alpha_n) one D2D delay later,
+   worker receives its summed I(alpha_n) one exchange leg later: the
+   scalar D2D delay, or (link-resolved traces) the max over its
+   incoming links from the sender set,
 3. responses stream back to the master; decode triggers as soon as the
    fastest ``decode_threshold`` responders are in (the per-subset
    decode matrix comes from the plan's subset cache, so recurring
@@ -143,6 +145,8 @@ def _replay_events(
     verify_extras: int,
     rng: np.random.Generator,
     master_decode_cost: float,
+    share_arrival: Optional[np.ndarray] = None,
+    compute_finish: Optional[np.ndarray] = None,
 ) -> _Replay:
     """The shared event loop: timestamps, subsets, and the decode search.
 
@@ -151,10 +155,27 @@ def _replay_events(
     shape — the batched runtime folds its whole batch in there);
     corruption is injected here so every caller gets identical fault
     semantics.
+
+    ``share_arrival`` / ``compute_finish`` override the trace-derived
+    Phase-1 arrival and H(alpha_n) completion times with absolute
+    timestamps — the hook the pipelined runtime uses to account for
+    master-uplink serialization and per-worker compute occupancy
+    across overlapping replays.  Defaults reproduce the standalone
+    semantics: arrival at ``share_delay``, completion one
+    ``compute_delay`` later.
+
+    With a link-resolved trace (``trace.link_delay`` set), a receiver's
+    exchange completes at the max over its *incoming* links from the
+    Phase-2 sender set rather than one scalar D2D delay; a dead
+    (infinite) incoming link starves the receiver, which then never
+    responds in Phase 3.
     """
     p = plan.field.p
-    share_at = trace.share_delay
+    share_at = trace.share_delay if share_arrival is None else share_arrival
     phase1_last = float(share_at[alive].max())
+    finish_at = (
+        share_at + trace.compute_delay if compute_finish is None else compute_finish
+    )
 
     # Heap entries: (time, seq, kind, worker).
     events: list = []
@@ -162,10 +183,11 @@ def _replay_events(
     for w in np.flatnonzero(alive):
         heapq.heappush(
             events,
-            (float(share_at[w] + trace.compute_delay[w]), next(seq), "compute", int(w)),
+            (float(finish_at[w]), next(seq), "compute", int(w)),
         )
 
     computed: list = []  # worker ids in compute-completion order
+    link_starved: list = []  # receivers with a dead incoming link
     phase2_ids: Optional[np.ndarray] = None
     phase2_set_time = float("nan")
     i_all: Optional[np.ndarray] = None
@@ -196,12 +218,23 @@ def _replay_events(
                 i_all[c] = rng.integers(0, p, size=i_all[c].shape, dtype=np.int64)
             vander_check = plan.decode_check_matrix()
             # Live, non-crashed workers respond one exchange + uplink
-            # delay after the set is announced.
+            # delay after the set is announced.  With a link matrix the
+            # exchange leg is the max over the receiver's incoming
+            # links from the sender set (its own diagonal entry is 0);
+            # a dead incoming link starves the receiver's I(alpha_r)
+            # sum, so it never responds.
             for r in np.flatnonzero(alive & ~trace.crash_after_phase2):
+                if trace.link_delay is not None:
+                    exchange = float(trace.link_delay[phase2_ids, r].max())
+                    if not np.isfinite(exchange):
+                        link_starved.append(int(r))
+                        continue
+                else:
+                    exchange = float(trace.d2d_delay[r])
                 heapq.heappush(
                     events,
                     (
-                        float(t_now + trace.d2d_delay[r] + trace.uplink_delay[r]),
+                        float(t_now + exchange + trace.uplink_delay[r]),
                         next(seq),
                         "response",
                         int(r),
@@ -240,7 +273,8 @@ def _replay_events(
         f"confirmations (threshold {plan.decode_threshold}); "
         f"dropouts={int(trace.dropout.sum())}, "
         f"crashed={int((trace.crash_after_phase2 & alive).sum())}, "
-        f"corrupt={int((trace.corrupt & alive).sum())}"
+        f"corrupt={int((trace.corrupt & alive).sum())}, "
+        f"link_starved={len(link_starved)}"
     )
 
 
@@ -328,6 +362,63 @@ def run_over_pool(
     return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
 
 
+def _batched_compute_closure(
+    plan: CMPCPlan,
+    fa: jnp.ndarray,
+    fb: jnp.ndarray,
+    rng: np.random.Generator,
+    batch: int,
+    mesh,
+    axis: str,
+    mode: str,
+    backend: str,
+) -> Callable[[np.ndarray], np.ndarray]:
+    """``compute_i_all`` for a batched replay (shared with the pipeline).
+
+    Folds the whole batch into each worker's payload so one Phase-2
+    pass serves every product; with ``mesh`` the exchange is the real
+    ``shard_map`` collective driven by the scheduler's fastest subset.
+    """
+    bry, bcy = plan.shapes.blk_y
+
+    def compute_i_all(phase2_ids: np.ndarray) -> np.ndarray:
+        if mesh is not None:
+            # Faithful distributed exchange: per-worker blinding draws,
+            # whole batch on one collective, sender subset = the
+            # scheduler's fastest n_workers.
+            noise = plan.field.random(
+                rng, (batch, plan.n_workers, plan.scheme.z, bry, bcy)
+            )
+            i_b = run_phase2_sharded(
+                plan, fa, fb, noise, mesh,
+                axis=axis, mode=mode, matmul_backend=backend,
+                worker_ids=phase2_ids,
+            )  # [batch, n_total, bry, bcy]
+            return np.moveaxis(np.asarray(i_b), 1, 0).reshape(
+                plan.n_total, batch * bry, bcy
+            )
+        # Dense simulation: fold the batch into the block rows so the
+        # existing degree-reduction matmul serves every product at once.
+        h = proto.worker_multiply(plan, fa, fb)  # [batch, n_total, bry, bcy]
+        h_w = jnp.moveaxis(h, 0, 1).reshape(plan.n_total, batch * bry, bcy)
+        return proto.degree_reduce(plan, h_w, rng, worker_ids=phase2_ids)
+
+    return compute_i_all
+
+
+def _unfold_batched_y(plan: CMPCPlan, coeffs: np.ndarray, batch: int) -> np.ndarray:
+    """Per-product assembly: the interpolated coefficients carry the
+    batch in their payload; unfold and lay out every Y at once (the
+    batched mirror of ``assemble_y``)."""
+    t = plan.scheme.t
+    sh = plan.shapes
+    bry, bcy = sh.blk_y
+    blocks = coeffs.reshape(-1, batch, bry, bcy)[: t * t].reshape(
+        t, t, batch, bry, bcy
+    )  # [l, i, b, ., .]
+    return blocks.transpose(2, 1, 3, 0, 4).reshape(batch, sh.ma, sh.mb)
+
+
 def run_batch_over_pool(
     plan: CMPCPlan,
     a: np.ndarray,
@@ -367,46 +458,17 @@ def run_batch_over_pool(
 
     a_j, b_j = proto._prep_batched_operands(plan, a, b)
     batch = int(a_j.shape[0])
-    bry, bcy = plan.shapes.blk_y
     fa, fb = proto.share_batched(
         plan, a_j, b_j, jax.random.PRNGKey(seed), backend=backend
     )
-
-    def compute_i_all(phase2_ids: np.ndarray) -> np.ndarray:
-        if mesh is not None:
-            # Faithful distributed exchange: per-worker blinding draws,
-            # whole batch on one collective, sender subset = the
-            # scheduler's fastest n_workers.
-            noise = plan.field.random(
-                rng, (batch, plan.n_workers, plan.scheme.z, bry, bcy)
-            )
-            i_b = run_phase2_sharded(
-                plan, fa, fb, noise, mesh,
-                axis=axis, mode=mode, matmul_backend=backend,
-                worker_ids=phase2_ids,
-            )  # [batch, n_total, bry, bcy]
-            return np.moveaxis(np.asarray(i_b), 1, 0).reshape(
-                plan.n_total, batch * bry, bcy
-            )
-        # Dense simulation: fold the batch into the block rows so the
-        # existing degree-reduction matmul serves every product at once.
-        h = proto.worker_multiply(plan, fa, fb)  # [batch, n_total, bry, bcy]
-        h_w = jnp.moveaxis(h, 0, 1).reshape(plan.n_total, batch * bry, bcy)
-        return proto.degree_reduce(plan, h_w, rng, worker_ids=phase2_ids)
+    compute_i_all = _batched_compute_closure(
+        plan, fa, fb, rng, batch, mesh, axis, mode, backend
+    )
 
     res = _replay_events(
         plan, trace, alive, compute_i_all, verify_extras, rng, master_decode_cost
     )
-
-    # Per-product assembly: the interpolated coefficients carry the
-    # batch in their payload; unfold and lay out every Y at once (the
-    # batched mirror of ``assemble_y``).
-    t = plan.scheme.t
-    sh = plan.shapes
-    blocks = res.coeffs.reshape(-1, batch, bry, bcy)[: t * t].reshape(
-        t, t, batch, bry, bcy
-    )  # [l, i, b, ., .]
-    y = blocks.transpose(2, 1, 3, 0, 4).reshape(batch, sh.ma, sh.mb)
+    y = _unfold_batched_y(plan, res.coeffs, batch)
 
     aggregate = _build_metrics(plan, trace, alive, res, batch=batch)
     # one replay served every product, so the per-product metrics are

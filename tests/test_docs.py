@@ -1,0 +1,40 @@
+"""Documentation layer stays healthy: required docs exist and every
+relative link in README.md / docs/*.md resolves (the same checker the
+CI docs smoke step runs)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_required_docs_exist():
+    for rel in (
+        "README.md",
+        "docs/protocol_engine.md",
+        "docs/edge_runtime.md",
+        "docs/kernel_design.md",
+    ):
+        assert os.path.exists(os.path.join(ROOT, rel)), f"{rel} missing"
+
+
+def test_doc_links_resolve():
+    res = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_doc_links.py"), ROOT],
+        capture_output=True,
+        text=True,
+    )
+    assert res.returncode == 0, f"broken doc links:\n{res.stderr}"
+
+
+def test_readme_names_the_entry_points():
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    for needle in (
+        "run_batched",
+        "run_pipeline_over_pool",
+        "make bench-edge",
+        "docs/protocol_engine.md",
+        "docs/edge_runtime.md",
+    ):
+        assert needle in readme, f"README.md no longer mentions {needle}"

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Check that relative links in README.md and docs/*.md resolve.
+
+Scans markdown links ``[text](target)`` and inline reference paths,
+skips absolute URLs (http/https/mailto) and pure anchors, strips
+``#fragment`` suffixes, and resolves each remaining target relative to
+the file that contains it.  Exits non-zero listing every broken link —
+the CI docs smoke step runs this so a moved file or a typo'd path
+fails the build instead of rotting in the docs.
+
+Usage: python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: str) -> list:
+    files = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files.extend(
+            os.path.join(docs, f)
+            for f in sorted(os.listdir(docs))
+            if f.endswith(".md")
+        )
+    return files
+
+
+def broken_links(root: str) -> list:
+    broken = []
+    for path in doc_files(root):
+        with open(path) as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(base, rel)):
+                broken.append((os.path.relpath(path, root), target))
+    return broken
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))
+    )
+    files = doc_files(root)
+    if not files:
+        print("no README.md or docs/*.md found", file=sys.stderr)
+        return 1
+    broken = broken_links(root)
+    for path, target in broken:
+        print(f"BROKEN {path}: ({target})", file=sys.stderr)
+    print(f"checked {len(files)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
