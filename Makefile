@@ -3,7 +3,8 @@
 
 PYTHON ?= python
 
-.PHONY: test test-fast bench bench-json bench-edge quickstart docs-check
+.PHONY: test test-fast bench bench-json bench-edge quickstart docs-check \
+	shim-check bench-diff
 
 test:
 	$(PYTHON) -m pytest -q
@@ -30,3 +31,13 @@ quickstart:
 # Verify every relative link in README.md and docs/*.md resolves.
 docs-check:
 	$(PYTHON) tools/check_doc_links.py
+
+# Verify version-drifting JAX spellings (shard_map / AxisType /
+# CompilerParams) stay inside their shim modules.
+shim-check:
+	$(PYTHON) tools/check_api_shims.py
+
+# Compare freshly regenerated BENCH_*.json against the committed
+# snapshots (deterministic leaves exact, wall-clock within a band).
+bench-diff:
+	$(PYTHON) tools/bench_diff.py

@@ -25,7 +25,7 @@ Scenarios:
                             responder; the master must spend one extra
                             confirmation before accepting a decode.
 
-Four extra sections ride along:
+Five extra sections ride along:
 
 * ``batched_replay``   — ``run_batch_over_pool`` replays a whole batch
                           of products through ONE straggler trace; the
@@ -50,7 +50,21 @@ Four extra sections ride along:
                           replays in flight with overlapping traces;
                           reports makespan vs the back-to-back
                           sequential replays, pipeline occupancy, and
-                          the Phase-1/Phase-2 overlap reclaimed.
+                          the Phase-1/Phase-2 overlap reclaimed,
+* ``adaptive``         — the ``AutoPlanner`` feedback loop vs every
+                          static candidate construction on
+                          byte-identical traces, in two drifting
+                          scenarios: ``degrading_links`` (the Phase-2
+                          fabric slows 8x mid-stream via
+                          ``TimeVaryingLinks`` — once mid-replay, then
+                          permanently) and ``elastic_pool`` (an
+                          ``ElasticPool`` shrinks 40 -> 22 -> 16, below
+                          some candidates' worker counts).  Statics that
+                          no longer fit a replay are reported with the
+                          replays they *could* run; the planner switches
+                          construction mid-stream and its per-replay
+                          ``PlanConfig`` choices, switch/respare counts,
+                          and fitted pool estimate land in the report.
 
 Emits ``BENCH_edge.json`` at the repo root (``make bench-edge``) with
 per-scenario completion statistics, worker counts, and the
@@ -66,21 +80,33 @@ import time
 import numpy as np
 
 from repro.core import constructions as C
+from repro.core.constructions import PlanConfig
 from repro.core.gf import Field
-from repro.core.planner import BlockShapes, get_plan, subset_cache_info
+from repro.core.planner import (
+    BlockShapes,
+    get_plan,
+    get_plan_for,
+    subset_cache_info,
+)
 from repro.runtime import (
     AsymmetricLinks,
+    AutoPlanner,
     ClusteredEdge,
     Deterministic,
+    ElasticPool,
     FaultSpec,
     HeavyTail,
     ShiftedExponential,
+    TimeVaryingLinks,
+    UniformLinks,
+    run_adaptive_over_pool,
     run_batch_over_pool,
     run_over_pool,
     run_pipeline_over_pool,
     sample_trace,
     summarize,
 )
+from repro.runtime.autoplan import _replay_seed
 
 from .common import repo_root, run_sharded_child, timeit, write_csv
 
@@ -206,6 +232,167 @@ def _pipeline_report(plans, field, rng, m, pool) -> dict:
         out["polydot"]["makespan"] / out["age"]["makespan"], 4
     )
     return out
+
+
+# Auto-planner scenarios: replays per scenario, products per replay,
+# and the planner's knobs (estimator window, exploration ratio).
+ADAPTIVE_BATCH = 2
+ADAPTIVE_WINDOW = 5
+ADAPTIVE_EXPLORE_RATIO = 1.5
+
+
+def _adaptive_statics(candidates, traces, a, b, want, m, seed) -> dict:
+    """Replay every static candidate over the exact traces the planner
+    faces — same per-replay seeds (``_replay_seed``), same per-
+    construction ``compute_scale`` work factors — so the comparison
+    isolates the *decisions*, not the simulation draw.  A static that
+    does not fit some replay's pool reports only the replays it could
+    run (the planner has no such gap: it switches)."""
+    K, batch = a.shape[0], a.shape[1]
+    ref = AutoPlanner(candidates, cost_m=m)
+    out = {}
+    for cand in ref.candidates:
+        wf = ref.work_factor(cand)
+        times = []
+        plans = {}
+        for k, trace in enumerate(traces):
+            if cand.n_workers > trace.n:
+                continue
+            cfg = cand.fit_to_pool(trace.n)
+            if cfg.n_total not in plans:
+                plans[cfg.n_total] = get_plan_for(
+                    cfg, BlockShapes(k=m, ma=m, mb=m, s=cfg.s, t=cfg.t)
+                )
+            res = run_batch_over_pool(
+                plans[cfg.n_total], a[k], b[k], trace,
+                seed=_replay_seed(seed, k), compute_scale=wf,
+            )
+            for i in range(batch):
+                if not np.array_equal(res.y[i], want[k][i]):
+                    raise AssertionError(
+                        f"static {cand.label()} replay {k}: decode "
+                        f"disagrees with oracle"
+                    )
+            times.append(res.metrics.completion_time)
+        out[cand.label()] = {
+            "work_factor": round(wf, 4),
+            "feasible_replays": len(times),
+            "completion_p50": round(float(np.percentile(times, 50)), 4),
+            "completion_mean": round(float(np.mean(times)), 4),
+            "fits_all_replays": len(times) == K,
+            "oracle_validated": True,
+        }
+    return out
+
+
+def _adaptive_scenario(candidates, traces, field, rng, m, seed) -> dict:
+    """One adaptive scenario: planner vs every static on shared traces."""
+    K = len(traces)
+    batch = ADAPTIVE_BATCH
+    a = field.random(rng, (K, batch, m, m))
+    b = field.random(rng, (K, batch, m, m))
+    want = [
+        [field.matmul(a[k, i].T, b[k, i]) for i in range(batch)]
+        for k in range(K)
+    ]
+    statics = _adaptive_statics(candidates, traces, a, b, want, m, seed)
+    planner = AutoPlanner(
+        candidates,
+        cost_m=m,
+        window=ADAPTIVE_WINDOW,
+        explore_ratio=ADAPTIVE_EXPLORE_RATIO,
+    )
+    run = run_adaptive_over_pool(planner, a, b, traces, seed=seed)
+    for k in range(K):
+        for i in range(batch):
+            if not np.array_equal(run.y[k, i], want[k][i]):
+                raise AssertionError(
+                    f"adaptive replay {k}: decode disagrees with oracle"
+                )
+    times = np.array([rm.completion_time for rm in run.replay_metrics])
+    adaptive_p50 = float(np.percentile(times, 50))
+    full = {
+        name: s["completion_p50"]
+        for name, s in statics.items()
+        if s["fits_all_replays"]
+    }
+    best = min(full.values())
+    worst = max(full.values())
+    return {
+        "replays": K,
+        "batch": batch,
+        "pool_sizes": [t.n for t in traces],
+        "statics": statics,
+        "adaptive": {
+            "completion_p50": round(adaptive_p50, 4),
+            "completion_mean": round(float(times.mean()), 4),
+            "oracle_validated": True,
+            **run.planner.summary(),
+        },
+        # < 1: the planner beats even the best fully-feasible static;
+        # the acceptance band tops out at 1.05 (exploration overhead).
+        "adaptive_over_best_static_p50": round(adaptive_p50 / best, 4),
+        "worst_static_over_adaptive_p50": round(worst / adaptive_p50, 4),
+    }
+
+
+def _adaptive_report(field, m) -> dict:
+    """Auto-planner vs static constructions under drifting conditions.
+
+    ``degrading_links``: a fixed pool whose Phase-2 fabric degrades 8x
+    — first mid-replay (the scheduler resolves the link matrix at each
+    replay's set-announcement time), then permanently.  The candidate
+    set spans the real trade-off: age(2,2,3) has the lightest per-worker
+    work, age(4,1,3) the shallowest barrier (N=13, threshold 4) at 1.37x
+    work — link degradation moves the optimum from the former to the
+    latter, and no static candidate is best in both regimes.
+
+    ``elastic_pool``: membership shrinks 40 -> 22 -> 16; at 16 only
+    age(4,1,3) still fits, so the planner is *forced* off anything else
+    it preferred, while statics that need more workers simply cannot
+    serve those replays.
+    """
+    latency = ShiftedExponential(shift=1.0, scale=0.5)
+    network = UniformLinks(HeavyTail(shift=0.2, scale=0.2, alpha=1.6), scale=0.3)
+
+    # -- degrading links over a fixed pool --------------------------------
+    cands = [
+        PlanConfig("age", 2, 2, 3),
+        PlanConfig("polydot", 2, 2, 3),
+        PlanConfig("age", 4, 1, 3),
+        PlanConfig("age", 4, 2, 3),
+    ]
+    pool = max(c.n_workers for c in cands) + 3
+    K, onset, factor, t_mid = 14, 5, 8.0, 1.6
+    traces = []
+    for k in range(K):
+        tr = sample_trace(pool, latency, seed=4000 + k, network=network)
+        if k == onset:
+            # Degradation arrives mid-replay: links are still clean when
+            # Phase 1 goes out, 8x slower by the Phase-2 exchange.
+            tr = TimeVaryingLinks(((t_mid, factor),)).apply(tr)
+        elif k > onset:
+            tr = TimeVaryingLinks(((0.0, factor),)).apply(tr)
+        traces.append(tr)
+    rng = np.random.default_rng(40)
+    degrading = _adaptive_scenario(cands, traces, field, rng, m, seed=17)
+    degrading["onset_replay"] = onset
+    degrading["link_factor"] = factor
+
+    # -- elastic pool ------------------------------------------------------
+    cands = [
+        PlanConfig("age", 2, 2, 3),
+        PlanConfig("polydot", 2, 2, 3),
+        PlanConfig("age", 4, 1, 3),
+    ]
+    sizes = [40] * 4 + [22] * 4 + [16] * 4
+    master = sample_trace(40, latency, seed=7000, network=network)
+    epool = ElasticPool(master, tuple(tuple(range(sz)) for sz in sizes))
+    traces = [epool.trace_for(k) for k in range(len(epool))]
+    rng = np.random.default_rng(41)
+    elastic = _adaptive_scenario(cands, traces, field, rng, m, seed=23)
+
+    return {"degrading_links": degrading, "elastic_pool": elastic}
 
 
 def _batched_replay_report(plans, field, rng, m) -> dict:
@@ -415,6 +602,7 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
         "scenarios": scenarios,
         "per_link": _per_link_report(plans, field, rng, m, pool, n_runs=n_runs),
         "pipelined": _pipeline_report(plans, field, rng, m, pool),
+        "adaptive": _adaptive_report(field, m),
         "batched_replay": _batched_replay_report(plans, field, rng, m),
         "sharded_batched": _sharded_report(),
         "subset_cache": subset_cache_info(),

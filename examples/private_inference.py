@@ -14,20 +14,21 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from repro.core import constructions as C  # noqa: E402
 from repro.core import protocol as proto  # noqa: E402
+from repro.core.constructions import PlanConfig  # noqa: E402
 from repro.core.distributed import run_phase2_sharded  # noqa: E402
 from repro.core.gf import Field  # noqa: E402
-from repro.core.planner import BlockShapes, make_plan  # noqa: E402
+from repro.core.planner import BlockShapes, get_plan_for  # noqa: E402
 
 
 def secure_layer_distributed(x, w, mesh, field, z=2, drop_worker=None):
     """One y = x @ W layer under CMPC with workers sharded on the mesh."""
     s = t = 2
     k, batch = x.shape[0], x.shape[1]
-    scheme = C.age_cmpc(s, t, z)
-    plan = make_plan(scheme, BlockShapes(k=k, ma=batch, mb=w.shape[1], s=s, t=t),
-                     n_spare=3)
+    config = PlanConfig("age", s=s, t=t, z=z, n_spare=3)
+    plan = get_plan_for(
+        config, BlockShapes(k=k, ma=batch, mb=w.shape[1], s=s, t=t)
+    )
     from repro.core.layers import choose_scales
 
     scale = choose_scales(k, float(np.abs(x).max()), float(np.abs(w).max()), field.p)

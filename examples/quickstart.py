@@ -10,9 +10,10 @@ import numpy as np
 
 from repro.core import closed_form as cf
 from repro.core import constructions as C
+from repro.core.constructions import PlanConfig
 from repro.core.gf import Field
 from repro.core.layers import secure_matmul, secure_matmul_batched
-from repro.core.planner import BlockShapes, make_plan, plan_cache_info
+from repro.core.planner import BlockShapes, get_plan_for, plan_cache_info
 from repro.core import protocol
 
 
@@ -27,17 +28,22 @@ def main():
     print(f"GCSA-NA       : {cf.n_gcsa_na(s, t, z)}")
 
     # --- exact field computation --------------------------------------
+    # PlanConfig is the declarative entry point: name the construction
+    # and its parameters, and get_plan_for builds (and caches) the plan.
     field = Field()
     rng = np.random.default_rng(0)
     m = 64
     a = field.random(rng, (m, m))
     b = field.random(rng, (m, m))
-    scheme = C.age_cmpc(s, t, z)
-    plan = make_plan(scheme, BlockShapes(k=m, ma=m, mb=m, s=s, t=t), n_spare=2)
+    config = PlanConfig("age", s=s, t=t, z=z, n_spare=2)
+    plan = get_plan_for(config, BlockShapes(k=m, ma=m, mb=m, s=s, t=t))
     y, trace = protocol.run(plan, a, b)
     assert np.array_equal(y, field.matmul(a.T, b))
-    print(f"\nGF(p) protocol: N={plan.n_workers} (+2 spares), "
-          f"exact result verified; {trace.total:,} field elements moved")
+    pred = cf.predict(config, m)
+    print(f"\nGF(p) protocol [{config.label()}]: N={plan.n_workers} "
+          f"(+{config.n_spare} spares), exact result verified; "
+          f"{trace.total:,} field elements moved "
+          f"(closed form: {pred.comm:,} across all phases)")
 
     # --- batched device-resident engine -------------------------------
     batch = 8

@@ -13,6 +13,7 @@ Layers (bottom-up):
 * ``layers``         — secure_matmul / PrivateLinear high-level API
 """
 from .closed_form import (  # noqa: F401
+    CostPrediction,
     age_gamma,
     age_lambda_star,
     communication_overhead,
@@ -23,7 +24,19 @@ from .closed_form import (  # noqa: F401
     n_polydot,
     n_ssmm,
     n_workers,
+    predict,
     storage_overhead,
 )
-from .constructions import Scheme, age_cmpc, age_cmpc_fixed, build_scheme, polydot_cmpc  # noqa: F401
+from .constructions import (  # noqa: F401
+    Construction,
+    PlanConfig,
+    Scheme,
+    age_cmpc,
+    age_cmpc_fixed,
+    build_scheme,
+    get_construction,
+    known_methods,
+    polydot_cmpc,
+    register_construction,
+)
 from .gf import Field, P_DEFAULT, mod_matmul_f32  # noqa: F401

@@ -244,3 +244,68 @@ def storage_overhead(m: int, s: int, t: int, z: int, n: int) -> int:
 def communication_overhead(m: int, t: int, n: int) -> int:
     """Corollary 12: scalars exchanged among workers in Phase 2 (eq. 34)."""
     return n * (n - 1) * (m * m // (t * t))
+
+
+# ----------------------------------------------------------------------
+# unified cost model: the closed-form prior behind plan selection
+# ----------------------------------------------------------------------
+import dataclasses as _dataclasses
+
+
+@_dataclasses.dataclass(frozen=True)
+class CostPrediction:
+    """Closed-form resource prediction for one ``PlanConfig`` at size m.
+
+    ``n_workers`` is the *exact* worker count (registry fast paths, not
+    the occasionally-overcounting transcribed formulas); the per-worker
+    overheads are Corollaries 10-12 evaluated at that count.  This is
+    the data-independent prior an auto-planner scores candidates with
+    before it has seen a single measured run.
+    """
+
+    n_workers: int
+    n_total: int  # provisioned = workers + spares
+    decode_threshold: int
+    compute: int  # scalar mults per worker (Corollary 10)
+    storage: int  # scalars stored per worker (Corollary 11)
+    comm: int  # scalars exchanged among workers, Phase 2 (Corollary 12)
+
+    def compute_factor(self, reference: "CostPrediction") -> float:
+        """Per-worker compute relative to another prediction — the
+        scale heterogeneous-compute scenarios multiply worker compute
+        delays by when replaying one pool under several constructions."""
+        return self.compute / max(reference.compute, 1)
+
+
+def predict(config, m: int, pool_size: int = None) -> CostPrediction:
+    """Unified cost-model entry: ``PlanConfig``-shaped config -> costs.
+
+    ``config`` needs attributes ``method, s, t, z, lam, n_spare``
+    (a :class:`~repro.core.constructions.PlanConfig`).  ``m`` is the
+    square-matrix dimension of the Corollary 10-12 overheads.  With
+    ``pool_size`` the spare count is re-accounted against that physical
+    pool (``n_total = pool_size``) instead of ``config.n_spare`` —
+    the elastic-pool form planners use.
+    """
+    from .constructions import get_construction  # deferred: cycle-free
+
+    ctor = get_construction(config.method)
+    n = ctor.n_workers(config.s, config.t, config.z, config.lam)
+    if pool_size is not None:
+        if pool_size < n:
+            raise ValueError(
+                f"pool of {pool_size} cannot seat {config.method} "
+                f"(needs {n} workers)"
+            )
+        n_total = pool_size
+    else:
+        n_total = n + config.n_spare
+    s, t, z = config.s, config.t, config.z
+    return CostPrediction(
+        n_workers=n,
+        n_total=n_total,
+        decode_threshold=t * t + z,
+        compute=computation_overhead(m, s, t, z, n),
+        storage=storage_overhead(m, s, t, z, n),
+        comm=communication_overhead(m, t, n),
+    )

@@ -26,7 +26,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from .constructions import Scheme
+from .constructions import PlanConfig, Scheme
 from .gf import Field
 
 
@@ -165,11 +165,13 @@ class CMPCPlan:
         return mat
 
 
-def _phase2_matrix(
+def _phase2_rows(
     scheme: Scheme, field: Field, alphas: np.ndarray, ids: np.ndarray
 ) -> np.ndarray:
-    """mix[n, n'] for senders ``ids`` (interpolating H's support from the
-    evaluations at alphas[ids]) and all receivers."""
+    """r[(i,l), n]: interpolation rows extracting the important
+    coefficients u_{i,l} from the sender subset ``ids`` — the expensive
+    (Gauss-Jordan) sender-side half of the Phase-2 mixing matrix,
+    independent of the receiver set."""
     if ids.size != scheme.n_workers:
         raise ValueError(
             f"phase 2 needs exactly {scheme.n_workers} workers, got {ids.size}"
@@ -180,14 +182,29 @@ def _phase2_matrix(
     v_inv = field.inv_matrix(v_h)  # coeff = v_inv @ evals
     imp_map = scheme.coded.important_map()
     pos = {u: j for j, u in enumerate(h_powers)}
-    # r[(i,l), n] = v_inv[pos(u_{i,l}), n]
     r = np.zeros((t * t, ids.size), np.int64)
     for (i, l), u in imp_map.items():
         r[i + t * l] = v_inv[pos[u]]
+    return r
+
+
+def _mix_from_rows(
+    scheme: Scheme, field: Field, r: np.ndarray, alphas: np.ndarray
+) -> np.ndarray:
+    """Fold sender rows with the receiver Vandermonde (cheap half)."""
     # receiver Vandermonde on G powers {i + t*l} = 0..t^2-1
-    v_g = field.vandermonde(alphas, range(t * t))  # [n_total, t^2]
+    v_g = field.vandermonde(alphas, range(scheme.t * scheme.t))
     # mix[n, n'] = sum_g r[g, n] * v_g[n', g]
-    return field.matmul(r.T, v_g.T)  # [N, n_total]
+    return field.matmul(r.T, v_g.T)  # [N, n_receivers]
+
+
+def _phase2_matrix(
+    scheme: Scheme, field: Field, alphas: np.ndarray, ids: np.ndarray
+) -> np.ndarray:
+    """mix[n, n'] for senders ``ids`` (interpolating H's support from the
+    evaluations at alphas[ids]) and all receivers."""
+    r = _phase2_rows(scheme, field, alphas, ids)
+    return _mix_from_rows(scheme, field, r, alphas)
 
 
 # ----------------------------------------------------------------------
@@ -197,9 +214,17 @@ def _phase2_matrix(
 # cost Vandermonde inversions (Gauss-Jordan mod p in Python) to build.
 # Layer code calls get_plan so repeated calls with the same protocol
 # signature — every forward pass of a PrivateLinear, every step of a
-# batched pipeline — reuse the mixing/decode constants.
+# batched pipeline — reuse the mixing/decode constants.  The key tuple
+# is exactly a resolved ``PlanConfig`` plus (shapes, p, seed); an
+# auto-planner re-proposing a config between replays lands on the same
+# entry, and a config differing ONLY in ``n_spare`` takes the
+# ``_replan_n_spare`` fast path (no new Gauss-Jordan inversions).
 _PLAN_CACHE: dict = {}
-_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "replans": 0}
+# Sibling index for the re-plan fast path: same (scheme, shapes, field,
+# seed), any n_spare -> the latest plan, whose sender-side constants a
+# different spare count can reuse verbatim.
+_PLAN_BY_SIG: dict = {}
 # Per-plan subset-matrix caches (phase2_matrix_cached /
 # decode_matrix_cached) share process-wide hit counters and a per-plan
 # size bound; a runtime facing a pool of n_total workers sees at most
@@ -212,7 +237,8 @@ _SUBSET_CACHE_MAX = 512
 _PLAN_CACHE_MAX = 256
 
 
-def _plan_key(scheme: Scheme, shapes: BlockShapes, field: Field, n_spare: int, seed: int):
+def _plan_sig(scheme: Scheme, shapes: BlockShapes, field: Field, seed: int):
+    """Everything a plan depends on except the spare count."""
     return (
         scheme.method,
         scheme.s,
@@ -221,9 +247,12 @@ def _plan_key(scheme: Scheme, shapes: BlockShapes, field: Field, n_spare: int, s
         scheme.lam,
         (shapes.k, shapes.ma, shapes.mb, shapes.s, shapes.t),
         field.p,
-        n_spare,
         seed,
     )
+
+
+def _plan_key(scheme: Scheme, shapes: BlockShapes, field: Field, n_spare: int, seed: int):
+    return _plan_sig(scheme, shapes, field, seed) + (n_spare,)
 
 
 def get_plan(
@@ -234,14 +263,30 @@ def get_plan(
     seed: int = 0,
 ) -> CMPCPlan:
     """Memoized ``make_plan``: one plan per (scheme, shapes, field,
-    n_spare, seed) signature, shared across layers and batches."""
+    n_spare, seed) signature, shared across layers and batches.
+
+    A miss whose signature matches a cached plan except for ``n_spare``
+    re-plans from that sibling instead of building from scratch:
+    evaluation points are prefix-consistent per seed, so the Phase-2
+    sender interpolation and the decode inverse carry over unchanged
+    and only receiver-side Vandermonde rows are grown or sliced.  An
+    auto-planner resizing spares between replays (elastic pools) pays
+    no Gauss-Jordan inversions for the switch.
+    """
     field = field or Field()
-    key = _plan_key(scheme, shapes, field, n_spare, seed)
+    sig = _plan_sig(scheme, shapes, field, seed)
+    key = sig + (n_spare,)
     plan = _PLAN_CACHE.get(key)
     if plan is None:
-        _PLAN_CACHE_STATS["misses"] += 1
-        plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
+        sibling = _PLAN_BY_SIG.get(sig)
+        if sibling is not None and sibling.n_spare != n_spare:
+            _PLAN_CACHE_STATS["replans"] += 1
+            plan = _replan_n_spare(sibling, n_spare, seed)
+        else:
+            _PLAN_CACHE_STATS["misses"] += 1
+            plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
         _PLAN_CACHE[key] = plan
+        _PLAN_BY_SIG[sig] = plan
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
     else:
@@ -249,14 +294,35 @@ def get_plan(
     return plan
 
 
+def get_plan_for(
+    config: PlanConfig,
+    shapes: BlockShapes,
+    field: Optional[Field] = None,
+    seed: int = 0,
+) -> CMPCPlan:
+    """The ``PlanConfig`` entry point: resolve the construction through
+    the registry and fetch the (cached) plan.  Configs that resolve to
+    the same scheme — e.g. ``lam=None`` and its pinned ``lambda*`` —
+    share one cache entry."""
+    if shapes.s != config.s or shapes.t != config.t:
+        raise ValueError("config and shapes disagree on (s, t)")
+    return get_plan(
+        config.scheme(), shapes, field=field, n_spare=config.n_spare, seed=seed
+    )
+
+
 def plan_cache_info() -> dict:
-    """{'hits', 'misses', 'size'} counters for the process-wide cache."""
+    """{'hits', 'misses', 'replans', 'size'} for the process-wide cache.
+    ``replans`` counts misses served by the n_spare fast path (no new
+    matrix inversions)."""
     return dict(_PLAN_CACHE_STATS, size=len(_PLAN_CACHE))
 
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
-    _PLAN_CACHE_STATS.update(hits=0, misses=0)
+    _PLAN_BY_SIG.clear()
+    _ALPHA_CACHE.clear()
+    _PLAN_CACHE_STATS.update(hits=0, misses=0, replans=0)
 
 
 def subset_cache_info() -> dict:
@@ -266,6 +332,28 @@ def subset_cache_info() -> dict:
 
 def subset_cache_clear() -> None:
     _SUBSET_CACHE_STATS.update(hits=0, misses=0)
+
+
+# Evaluation points are prefixes of ONE seeded permutation of the
+# nonzero field elements, so plans differing only in pool size share
+# alpha prefixes — the invariant behind the n_spare re-plan fast path.
+# One permutation costs ~p int64s; bound the cache.
+_ALPHA_CACHE: dict = {}
+_ALPHA_CACHE_MAX = 16
+
+
+def _alpha_prefix(field: Field, seed: int, n: int) -> np.ndarray:
+    if n >= field.p:
+        raise ValueError("field too small for worker count")
+    key = (field.p, seed)
+    perm = _ALPHA_CACHE.get(key)
+    if perm is None:
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(field.p - 1).astype(np.int64) + 1
+        _ALPHA_CACHE[key] = perm
+        while len(_ALPHA_CACHE) > _ALPHA_CACHE_MAX:
+            _ALPHA_CACHE.pop(next(iter(_ALPHA_CACHE)))
+    return perm[:n].copy()
 
 
 def make_plan(
@@ -279,14 +367,12 @@ def make_plan(
     if shapes.s != scheme.s or shapes.t != scheme.t:
         raise ValueError("scheme and shapes disagree on (s, t)")
     n = scheme.n_workers + n_spare
-    if n >= field.p:
-        raise ValueError("field too small for worker count")
-    rng = np.random.default_rng(seed)
-    # distinct nonzero evaluation points
-    alphas = rng.choice(field.p - 1, size=n, replace=False).astype(np.int64) + 1
+    # distinct nonzero evaluation points (seeded-permutation prefix)
+    alphas = _alpha_prefix(field, seed, n)
     va = field.vandermonde(alphas, scheme.fa_powers)
     vb = field.vandermonde(alphas, scheme.fb_powers)
-    mix = _phase2_matrix(scheme, field, alphas, np.arange(scheme.n_workers))
+    r = _phase2_rows(scheme, field, alphas, np.arange(scheme.n_workers))
+    mix = _mix_from_rows(scheme, field, r, alphas)
     tt = scheme.t * scheme.t
     vnoise = field.vandermonde(alphas, range(tt, tt + scheme.z))
     dec_ids = np.arange(scheme.decode_threshold)
@@ -297,7 +383,7 @@ def make_plan(
     important_idx = np.zeros((scheme.t, scheme.t), np.int64)
     for (i, l), u in imp.items():
         important_idx[i, l] = pos[u]
-    return CMPCPlan(
+    plan = CMPCPlan(
         scheme=scheme,
         field=field,
         shapes=shapes,
@@ -310,3 +396,61 @@ def make_plan(
         decode_w=decode_w,
         important_idx=important_idx,
     )
+    # stash the sender-side interpolation rows for the re-plan fast path
+    object.__setattr__(plan, "_phase2_r", r)
+    return plan
+
+
+def _replan_n_spare(base: CMPCPlan, n_spare: int, seed: int) -> CMPCPlan:
+    """Re-plan ``base`` for a different spare count without re-running
+    any Gauss-Jordan inversion.
+
+    Evaluation points are prefix-consistent per seed, so the primary
+    workers (and hence the Phase-2 sender interpolation rows and the
+    decode inverse) are untouched; only receiver-indexed rows of the
+    Vandermonde constants grow or shrink.  Shrinking slices; growing
+    evaluates Vandermonde rows for the new alphas and extends the mix
+    with receiver columns folded from the stashed sender rows.
+    """
+    scheme, field = base.scheme, base.field
+    n_new = scheme.n_workers + n_spare
+    n_old = base.n_total
+    r = base.__dict__.get("_phase2_r")
+    if r is None:  # plan predates the stash (or crossed a process)
+        r = _phase2_rows(scheme, field, base.alphas, np.arange(scheme.n_workers))
+    if n_new <= n_old:
+        alphas = base.alphas[:n_new].copy()
+        va = base.va[:n_new].copy()
+        vb = base.vb[:n_new].copy()
+        vnoise = base.vnoise[:n_new].copy()
+        mix = base.mix[:, :n_new].copy()
+    else:
+        alphas = _alpha_prefix(field, seed, n_new)
+        if not np.array_equal(alphas[:n_old], base.alphas):
+            raise ValueError(
+                "re-plan sibling has mismatched evaluation points "
+                "(plan not built from this seed's alpha permutation)"
+            )
+        new = alphas[n_old:]
+        va = np.vstack([base.va, field.vandermonde(new, scheme.fa_powers)])
+        vb = np.vstack([base.vb, field.vandermonde(new, scheme.fb_powers)])
+        tt = scheme.t * scheme.t
+        vnoise = np.vstack(
+            [base.vnoise, field.vandermonde(new, range(tt, tt + scheme.z))]
+        )
+        mix = np.hstack([base.mix, _mix_from_rows(scheme, field, r, new)])
+    plan = CMPCPlan(
+        scheme=scheme,
+        field=field,
+        shapes=base.shapes,
+        n_spare=n_spare,
+        alphas=alphas,
+        va=va,
+        vb=vb,
+        mix=mix,
+        vnoise=vnoise,
+        decode_w=base.decode_w,  # depends on the (unchanged) first thr alphas
+        important_idx=base.important_idx,
+    )
+    object.__setattr__(plan, "_phase2_r", r)
+    return plan

@@ -36,16 +36,28 @@ Traces can be link-resolved: ``NetworkModel`` implementations
 per-``(sender, receiver)`` Phase-2 delay matrix plus master up/down
 links, and the scheduler completes a receiver's exchange at the max
 over its *incoming* links.
+
+Scenario layer for the auto-planner (``autoplan``): a
+``TimeVaryingLinks`` schedule degrades the Phase-2 fabric mid-replay
+(the scheduler resolves the matrix in effect when the exchange goes
+out), and an ``ElasticPool`` changes the worker membership between
+replays.  ``AutoPlanner`` closes the loop — it fits the pool's
+straggler tails and fault rates from observed runs (``estimate_pool``)
+and picks the construction for each replay, either sequentially
+(``run_adaptive_over_pool``) or mid-stream inside the pipeline
+(``run_pipeline_over_pool(..., planner=...)``).
 """
 from .pool import (  # noqa: F401
     AsymmetricLinks,
     ClusteredEdge,
     Deterministic,
+    ElasticPool,
     FaultSpec,
     HeavyTail,
     LatencyModel,
     NetworkModel,
     ShiftedExponential,
+    TimeVaryingLinks,
     UniformLinks,
     WorkerTrace,
     sample_trace,
@@ -57,5 +69,22 @@ from .scheduler import (  # noqa: F401
     run_batch_over_pool,
     run_over_pool,
 )
-from .metrics import PipelineMetrics, RunMetrics, summarize  # noqa: F401
+from .metrics import (  # noqa: F401
+    ObservedRun,
+    PipelineMetrics,
+    PoolEstimate,
+    RunMetrics,
+    estimate_pool,
+    fit_order_stats,
+    observed_run,
+    order_stat_mean,
+    summarize,
+)
 from .pipeline import PipelineRun, run_pipeline_over_pool  # noqa: F401
+from .autoplan import (  # noqa: F401
+    AdaptiveRun,
+    AutoPlanner,
+    PlanDecision,
+    plan_for_decision,
+    run_adaptive_over_pool,
+)

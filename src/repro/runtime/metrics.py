@@ -16,7 +16,7 @@ total wire bytes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -113,3 +113,195 @@ def summarize(runs: List[RunMetrics]) -> Dict:
         ],
         "wire_bytes_mean": float(np.mean([r.trace.total_bytes for r in runs])),
     }
+
+
+# ----------------------------------------------------------------------
+# estimators: what the master can infer about the pool from its runs
+# ----------------------------------------------------------------------
+#
+# The event loop's two waits are order statistics of i.i.d. per-worker
+# delays: the Phase-2 set fixes at the n_workers-th fastest
+# share+compute completion, and the decode at the (threshold+extras)-th
+# fastest exchange+uplink response.  Under the literature's
+# shifted-exponential straggler model the k-th of n order statistic has
+# mean ``shift + scale * (H_n - H_{n-k})`` (harmonic-number
+# differences), so each observed run contributes one linear equation in
+# (shift, scale) per wait — a handful of runs over different (k, n)
+# pins both legs, and an auto-planner can extrapolate completion times
+# to constructions it has never executed.
+
+
+def harmonic(n: int) -> float:
+    """H_n = sum_{i=1..n} 1/i (H_0 = 0)."""
+    n = int(n)
+    if n <= 0:
+        return 0.0
+    return float(np.sum(1.0 / np.arange(1, n + 1)))
+
+
+def order_stat_mean(k: int, n: int, shift: float, scale: float) -> float:
+    """Mean k-th of n order statistic of shift + Exp(scale) draws."""
+    if k <= 0:
+        return 0.0
+    if k > n:
+        return float("inf")
+    return shift + scale * (harmonic(n) - harmonic(n - k))
+
+
+def fit_order_stats(samples: Sequence[Tuple[float, int, int]]) -> Tuple[float, float]:
+    """Least-squares (shift, scale) from (value, k, n) order-stat samples.
+
+    Each sample says "the k-th of n i.i.d. delays was observed at
+    ``value``", i.e. ``value ~= shift + scale * (H_n - H_{n-k})``.
+    With fewer than two distinct harmonic gaps the system is
+    underdetermined; attribute everything to ``scale`` (shift 0), which
+    keeps extrapolation proportional — the conservative choice for
+    ranking constructions by tail exposure.  ``scale`` is clamped >= 0.
+    """
+    pts = [
+        (float(v), harmonic(n) - harmonic(n - k))
+        for v, k, n in samples
+        if 0 < k <= n
+    ]
+    if not pts:
+        return 0.0, 0.0
+    v = np.array([p[0] for p in pts])
+    h = np.array([p[1] for p in pts])
+    if np.ptp(h) < 1e-12 or len(pts) < 2:
+        mean_h = float(h.mean())
+        return 0.0, float(v.mean() / mean_h) if mean_h > 0 else 0.0
+    a = np.stack([np.ones_like(h), h], axis=1)
+    (shift, scale), *_ = np.linalg.lstsq(a, v, rcond=None)
+    if scale < 0:  # pathological fit; fall back to proportional
+        mean_h = float(h.mean())
+        return 0.0, float(v.mean() / mean_h) if mean_h > 0 else 0.0
+    return float(shift), float(scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservedRun:
+    """Master-observable outcome of one replay — auto-planner food.
+
+    All times are relative to the replay's own start (pass the absolute
+    pipeline start to ``observed_run`` for pipelined replays).
+    """
+
+    n_pool: int  # provisioned workers
+    n_workers: int  # Phase-2 set size (k of the ready order stat)
+    n_ready_pool: int  # live workers racing for the set (its n)
+    thr_arrived: int  # responses in hand at acceptance
+    n_receivers: int  # live, non-crashed workers able to respond
+    set_time: float  # Phase-2 set announcement
+    response_delta: float  # completion - set_time (exchange+uplink leg)
+    completion: float
+    n_dropped: int
+    n_rejected: int
+
+
+def observed_run(m: RunMetrics, start: float = 0.0) -> ObservedRun:
+    """Project a :class:`RunMetrics` onto what the master could observe."""
+    n_live = m.n_provisioned - m.n_dropped
+    return ObservedRun(
+        n_pool=m.n_provisioned,
+        n_workers=int(m.phase2_ids.size),
+        n_ready_pool=n_live,
+        thr_arrived=int(
+            m.responder_ids.size + m.confirmed_by.size + m.rejected_ids.size
+        ),
+        n_receivers=n_live - m.n_crashed,
+        set_time=float(m.phase2_set_time - start),
+        response_delta=float(m.completion_time - m.phase2_set_time),
+        completion=float(m.completion_time - start),
+        n_dropped=m.n_dropped,
+        n_rejected=int(m.rejected_ids.size),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolEstimate:
+    """Fitted pool behaviour: straggler tails and fault rates.
+
+    ``ready_*`` parameterize the share+compute leg (Phase-1 delivery
+    through H(alpha_n) completion), ``resp_*`` the exchange+uplink leg
+    (Phase-2 announcement through a response landing at the master),
+    both as shifted exponentials.  Rates are empirical frequencies.
+    """
+
+    ready_shift: float
+    ready_scale: float
+    resp_shift: float
+    resp_scale: float
+    dropout_rate: float
+    crash_rate: float
+    corrupt_rate: float
+    n_runs: int
+
+    def predict_completion(
+        self, n_workers: int, threshold: int, pool_size: int
+    ) -> float:
+        """Expected completion of a construction on this pool.
+
+        ``inf`` when the pool cannot field the Phase-2 set or the
+        decode threshold after expected dropouts/crashes — the planner
+        treats that as infeasible.
+        """
+        n_live = int(np.floor(pool_size * (1.0 - self.dropout_rate)))
+        if n_workers > n_live:
+            return float("inf")
+        t_set = order_stat_mean(
+            n_workers, n_live, self.ready_shift, self.ready_scale
+        )
+        n_recv = int(np.floor(n_live * (1.0 - self.crash_rate)))
+        if threshold > n_recv:
+            return float("inf")
+        t_resp = order_stat_mean(
+            threshold, n_recv, self.resp_shift, self.resp_scale
+        )
+        return t_set + t_resp
+
+
+# Uninformed prior: unit-scale exponentials on both legs, no faults.
+# Ranking candidates under it orders them purely by harmonic gaps —
+# i.e. by how deep into the pool's tail each construction must reach.
+DEFAULT_ESTIMATE = PoolEstimate(
+    ready_shift=0.0,
+    ready_scale=1.0,
+    resp_shift=0.0,
+    resp_scale=1.0,
+    dropout_rate=0.0,
+    crash_rate=0.0,
+    corrupt_rate=0.0,
+    n_runs=0,
+)
+
+
+def estimate_pool(runs: Sequence[ObservedRun]) -> PoolEstimate:
+    """Fit a :class:`PoolEstimate` from observed replays.
+
+    Runs may come from *different* constructions and pool sizes — that
+    diversity is what makes the order-stat fits well-posed (each run
+    contributes a different harmonic gap).  Falls back to
+    :data:`DEFAULT_ESTIMATE` on an empty list.
+    """
+    runs = list(runs)
+    if not runs:
+        return DEFAULT_ESTIMATE
+    ready_shift, ready_scale = fit_order_stats(
+        [(r.set_time, r.n_workers, r.n_ready_pool) for r in runs]
+    )
+    resp_shift, resp_scale = fit_order_stats(
+        [(r.response_delta, r.thr_arrived, r.n_receivers) for r in runs]
+    )
+    pool = sum(r.n_pool for r in runs)
+    recv = sum(r.n_receivers for r in runs)
+    return PoolEstimate(
+        ready_shift=ready_shift,
+        ready_scale=ready_scale,
+        resp_shift=resp_shift,
+        resp_scale=resp_scale,
+        dropout_rate=sum(r.n_dropped for r in runs) / max(pool, 1),
+        crash_rate=sum(r.n_ready_pool - r.n_receivers for r in runs)
+        / max(sum(r.n_ready_pool for r in runs), 1),
+        corrupt_rate=sum(r.n_rejected for r in runs) / max(recv, 1),
+        n_runs=len(runs),
+    )

@@ -42,7 +42,7 @@ the summed communication ``Trace``).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -76,8 +76,10 @@ class PipelineRun:
     metrics: PipelineMetrics
 
 
-def _prep_pipeline_operands(plan: CMPCPlan, a, b, depth: int):
-    """Promote operands to [K, batch, k, m] and validate against the plan."""
+def _prep_pipeline_operands(plan, a, b, depth: int):
+    """Promote operands to [K, batch, k, m]; validate against the plan
+    when one is fixed up front (auto-planned pipelines pick per-replay
+    plans whose block splits differ, but the global dims still bind)."""
     a = np.asarray(a)
     b = np.asarray(b)
     if a.ndim == 3:  # [K, k, m] -> batch-1 replays
@@ -95,17 +97,20 @@ def _prep_pipeline_operands(plan: CMPCPlan, a, b, depth: int):
         )
     if a.shape[1] != b.shape[1]:
         raise ValueError(f"batch mismatch: {a.shape[1]} vs {b.shape[1]}")
-    sh = plan.shapes
-    if a.shape[2:] != (sh.k, sh.ma) or b.shape[2:] != (sh.k, sh.mb):
-        raise ValueError(
-            f"operands {a.shape[2:]}/{b.shape[2:]} disagree with plan "
-            f"shapes ({sh.k}, {sh.ma})/({sh.k}, {sh.mb})"
-        )
+    if a.shape[2] != b.shape[2]:
+        raise ValueError(f"inner-dim mismatch: {a.shape[2]} vs {b.shape[2]}")
+    if plan is not None:
+        sh = plan.shapes
+        if a.shape[2:] != (sh.k, sh.ma) or b.shape[2:] != (sh.k, sh.mb):
+            raise ValueError(
+                f"operands {a.shape[2:]}/{b.shape[2:]} disagree with plan "
+                f"shapes ({sh.k}, {sh.ma})/({sh.k}, {sh.mb})"
+            )
     return a, b
 
 
 def run_pipeline_over_pool(
-    plan: CMPCPlan,
+    plan: Optional[CMPCPlan],
     a: np.ndarray,
     b: np.ndarray,
     traces: Sequence[WorkerTrace],
@@ -116,6 +121,9 @@ def run_pipeline_over_pool(
     axis: str = "workers",
     mode: str = "all_to_all",
     backend: str = "auto",
+    planner=None,
+    plan_seed: int = 0,
+    compute_scale="auto",
 ) -> PipelineRun:
     """Run K batched replays through the pool with overlapping traces.
 
@@ -129,6 +137,23 @@ def run_pipeline_over_pool(
     failures raise :class:`DecodeFailure` exactly like the standalone
     entry points.
 
+    With ``planner`` (an :class:`~repro.runtime.autoplan.AutoPlanner`)
+    the construction is chosen *per replay* at the pipeline's replay
+    boundaries: the planner decides from everything observed so far,
+    the chosen config is re-fitted to the (fixed-size) pool, and the
+    replay's outcome feeds back before the next decision — mid-stream
+    scheme/lambda/spare switching inside one pipeline.  ``plan`` may
+    then be ``None``; pool size must be constant across traces (the
+    pipeline's serialized master links and worker occupancy assume a
+    stable worker set — elastic pools go through
+    :func:`~repro.runtime.autoplan.run_adaptive_over_pool`).
+
+    ``compute_scale``: per-unit-work compute scaling (see
+    ``run_batch_over_pool``).  The default ``"auto"`` resolves to the
+    planner's per-construction work factor when a planner is given
+    (different constructions do different per-worker work on the same
+    trace) and to 1.0 otherwise; pass a float to force one scale.
+
     Randomness: replay k draws from ``default_rng([seed, k])`` and the
     folded JAX key, so replays are independent but the whole pipeline
     is reproducible per seed.
@@ -139,17 +164,26 @@ def run_pipeline_over_pool(
     depth = len(traces)
     if depth == 0:
         raise ValueError("need at least one trace/replay")
-    for k, trace in enumerate(traces):
-        if trace.n != plan.n_total:
+    if plan is None and planner is None:
+        raise ValueError("need a plan or a planner")
+    if planner is None:
+        for k, trace in enumerate(traces):
+            if trace.n != plan.n_total:
+                raise ValueError(
+                    f"trace {k} covers {trace.n} workers, plan provisions "
+                    f"{plan.n_total}"
+                )
+    else:
+        sizes = {trace.n for trace in traces}
+        if len(sizes) != 1:
             raise ValueError(
-                f"trace {k} covers {trace.n} workers, plan provisions "
-                f"{plan.n_total}"
+                f"pipelined replays need one pool size, got {sorted(sizes)}"
             )
     a, b = _prep_pipeline_operands(plan, a, b, depth)
     batch = int(a.shape[1])
     key = jax.random.PRNGKey(seed)
 
-    n = plan.n_total
+    n = plan.n_total if plan is not None else traces[0].n
     upload_free = np.zeros(n)  # when the master's link to w frees up
     worker_free = np.zeros(n)  # when worker w's compute frees up
 
@@ -161,9 +195,33 @@ def run_pipeline_over_pool(
     agg_trace = None
 
     for k, trace in enumerate(traces):
-        alive = _check_pool(plan, trace)
+        if planner is None:
+            decision = None
+            plan_k = plan
+        else:
+            # Replay-boundary feedback: decide from everything observed
+            # so far, re-fitting spares to the pool (same-construction
+            # decisions hit the plan cache; spare refits take the
+            # replan fast path).
+            from .autoplan import plan_for_decision
+
+            decision = planner.decide(trace.n)
+            plan_k = plan_for_decision(
+                decision,
+                int(a.shape[2]),
+                int(a.shape[3]),
+                int(b.shape[3]),
+                seed=plan_seed,
+            )
+        alive = _check_pool(plan_k, trace)
         extras_k = _resolve_verify_extras(verify_extras, trace)
         rng = np.random.default_rng([seed, k])
+        if compute_scale == "auto":
+            scale_k = (
+                planner.work_factor(decision.config) if planner is not None else 1.0
+            )
+        else:
+            scale_k = float(compute_scale)
 
         # -- pipeline timing: serialize the master links and compute --
         starts[k] = float(upload_free.min())
@@ -171,21 +229,21 @@ def run_pipeline_over_pool(
         upload_free = arrive.copy()
         comp_start = np.maximum(arrive, worker_free)
         finish = np.where(
-            trace.dropout, comp_start, comp_start + trace.compute_delay
+            trace.dropout, comp_start, comp_start + scale_k * trace.compute_delay
         )
         # worker_free is updated after the replay: non-set workers
         # abandon at the Phase-2 announcement (see below).
 
         # -- numeric path: same batched engine as run_batch_over_pool --
-        a_j, b_j = proto._prep_batched_operands(plan, a[k], b[k])
+        a_j, b_j = proto._prep_batched_operands(plan_k, a[k], b[k])
         fa, fb = proto.share_batched(
-            plan, a_j, b_j, jax.random.fold_in(key, k), backend=backend
+            plan_k, a_j, b_j, jax.random.fold_in(key, k), backend=backend
         )
         compute_i_all = _batched_compute_closure(
-            plan, fa, fb, rng, batch, mesh, axis, mode, backend
+            plan_k, fa, fb, rng, batch, mesh, axis, mode, backend
         )
         res = _replay_events(
-            plan,
+            plan_k,
             trace,
             alive,
             compute_i_all,
@@ -208,9 +266,11 @@ def run_pipeline_over_pool(
             finish,
         )
 
-        ys.append(_unfold_batched_y(plan, res.coeffs, batch))
-        m = _build_metrics(plan, trace, alive, res, batch=batch)
+        ys.append(_unfold_batched_y(plan_k, res.coeffs, batch))
+        m = _build_metrics(plan_k, trace, alive, res, batch=batch)
         replay_metrics.append(m)
+        if planner is not None:
+            planner.observe(decision.config, m, start=starts[k])
         completions[k] = m.completion_time
         phase1_lasts[k] = m.phase1_last_share
         agg_trace = m.trace if agg_trace is None else agg_trace + m.trace

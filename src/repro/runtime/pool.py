@@ -243,6 +243,13 @@ class WorkerTrace:
     # link).  None = legacy scalar model: every incoming link of
     # receiver r costs d2d_delay[r].
     link_delay: Optional[np.ndarray] = None
+    # Optional time-varying fabric: sorted (start_time, [n, n] matrix)
+    # entries.  From ``start_time`` onward the entry's matrix replaces
+    # ``link_delay`` for Phase-2 exchange legs *sent* at or after that
+    # time; before the first entry ``link_delay`` applies.  Attached by
+    # ``TimeVaryingLinks.apply`` (explicit matrices, no extra random
+    # draws, so the pre-degradation replay is byte-identical).
+    link_schedule: Optional[Tuple[Tuple[float, np.ndarray], ...]] = None
 
     @property
     def n(self) -> int:
@@ -250,7 +257,7 @@ class WorkerTrace:
 
     def __post_init__(self):
         for f in dataclasses.fields(self):
-            if f.name == "link_delay":
+            if f.name in ("link_delay", "link_schedule"):
                 continue
             arr = getattr(self, f.name)
             if arr.shape != (self.n,):
@@ -260,30 +267,77 @@ class WorkerTrace:
                 f"link_delay must be a [{self.n}, {self.n}] matrix, "
                 f"got {self.link_delay.shape}"
             )
+        if self.link_schedule is not None:
+            if self.link_delay is None:
+                raise ValueError(
+                    "link_schedule needs a base link_delay matrix "
+                    "(materialize with with_links first)"
+                )
+            for start, mat in self.link_schedule:
+                if mat.shape != (self.n, self.n):
+                    raise ValueError(
+                        f"link_schedule matrix at t={start} must be "
+                        f"[{self.n}, {self.n}], got {mat.shape}"
+                    )
+
+    def link_at(self, t: float) -> Optional[np.ndarray]:
+        """Phase-2 link matrix in effect for exchanges sent at time ``t``.
+
+        ``None`` when the trace is scalar (no link matrix at all);
+        otherwise the latest scheduled matrix whose start time is
+        <= ``t``, falling back to ``link_delay`` before the first one.
+        """
+        mat = self.link_delay
+        if self.link_schedule:
+            for start, m in self.link_schedule:
+                if t >= start:
+                    mat = m
+        return mat
 
     def _copy_fields(self) -> dict:
-        return {
-            f.name: None
-            if getattr(self, f.name) is None
-            else getattr(self, f.name).copy()
-            for f in dataclasses.fields(self)
-        }
+        out = {}
+        for f in dataclasses.fields(self):
+            arr = getattr(self, f.name)
+            if arr is None:
+                out[f.name] = None
+            elif f.name == "link_schedule":
+                out[f.name] = tuple((s, m.copy()) for s, m in arr)
+            else:
+                out[f.name] = arr.copy()
+        return out
 
     def take(self, n: int) -> "WorkerTrace":
         """First-n-workers prefix (replay one trace across schemes).
 
-        The link matrix slices ``[:n, :n]`` — a prefix pool keeps
+        The link matrices slice ``[:n, :n]`` — a prefix pool keeps
         exactly the sub-fabric among its own workers.
         """
         if n > self.n:
             raise ValueError(f"trace holds {self.n} workers, need {n}")
+        return self.select(np.arange(n))
+
+    def select(self, ids: Sequence[int]) -> "WorkerTrace":
+        """Arbitrary-membership sub-pool (elastic workers join/leave).
+
+        Generalizes ``take``: the returned trace covers exactly the
+        workers in ``ids`` (in the given order), with link matrices
+        sliced to the sub-fabric among them, so a worker keeps
+        byte-identical behaviour across every replay it attends.
+        """
+        idx = self._checked_ids("select ids", ids)
         out = {}
         for f in dataclasses.fields(self):
             arr = getattr(self, f.name)
-            if f.name == "link_delay":
-                out[f.name] = None if arr is None else arr[:n, :n].copy()
+            if arr is None:
+                out[f.name] = None
+            elif f.name == "link_delay":
+                out[f.name] = arr[np.ix_(idx, idx)].copy()
+            elif f.name == "link_schedule":
+                out[f.name] = tuple(
+                    (s, m[np.ix_(idx, idx)].copy()) for s, m in arr
+                )
             else:
-                out[f.name] = arr[:n].copy()
+                out[f.name] = arr[idx].copy()
         return WorkerTrace(**out)
 
     def with_link_matrix(self, link: np.ndarray) -> "WorkerTrace":
@@ -387,6 +441,83 @@ class WorkerTrace:
         crash = self.crash_after_phase2 & ~self.dropout
         corrupt = self.corrupt & ~self.dropout & ~crash
         return dataclasses.replace(self, crash_after_phase2=crash, corrupt=corrupt)
+
+
+# ----------------------------------------------------------------------
+# time-varying links and elastic pools (the auto-planner's scenarios)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TimeVaryingLinks:
+    """Deterministic mid-replay Phase-2 link degradation schedule.
+
+    ``schedule`` holds ``(start_time, factor)`` entries with strictly
+    increasing non-negative start times: from ``start_time`` onward
+    every Phase-2 link delay is the trace's base matrix scaled by
+    ``factor`` (> 1 degrades, < 1 recovers; the 0 diagonal and dead
+    ``inf`` links are preserved by scaling).  ``apply`` attaches the
+    schedule to a trace as explicit matrices — no extra random draws —
+    so the replay before the first start time is byte-identical to the
+    base trace, and the scheduled trace prefix-slices (``take`` /
+    ``select``) like any link-resolved trace.
+    """
+
+    schedule: Tuple[Tuple[float, float], ...]
+
+    def __post_init__(self):
+        starts = [float(s) for s, _ in self.schedule]
+        if any(s < 0 for s in starts):
+            raise ValueError("schedule start times must be >= 0")
+        if any(b <= a for a, b in zip(starts, starts[1:])):
+            raise ValueError("schedule start times must be strictly increasing")
+        if any(float(f) <= 0 for _, f in self.schedule):
+            raise ValueError("schedule factors must be > 0")
+
+    def apply(self, trace: WorkerTrace) -> WorkerTrace:
+        base = trace if trace.link_delay is not None else trace.with_links()
+        entries = tuple(
+            (float(s), base.link_delay * float(f)) for s, f in self.schedule
+        )
+        return dataclasses.replace(base, link_schedule=entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPool:
+    """Per-replay worker membership over one master trace.
+
+    ``master`` records the behaviour of every worker that ever appears;
+    ``membership[k]`` lists the ids present for replay ``k``, so
+    workers join and leave between replays while each attending
+    worker's behaviour stays byte-identical (every replay trace is a
+    ``select`` of the same master draw — an elastic replay equals a
+    static run over the same members).  A shrinking pool is what forces
+    an auto-planner to re-fit spares or switch constructions between
+    replays.  Iterating yields the per-replay traces.
+    """
+
+    master: WorkerTrace
+    membership: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        norm = tuple(tuple(int(i) for i in ids) for ids in self.membership)
+        object.__setattr__(self, "membership", norm)
+        for k, ids in enumerate(norm):
+            self.master._checked_ids(f"membership[{k}]", ids)
+
+    @property
+    def depth(self) -> int:
+        return len(self.membership)
+
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(len(ids) for ids in self.membership)
+
+    def trace_for(self, k: int) -> WorkerTrace:
+        return self.master.select(self.membership[k])
+
+    def __len__(self) -> int:
+        return self.depth
+
+    def __iter__(self):
+        return (self.trace_for(k) for k in range(self.depth))
 
 
 def sample_trace(

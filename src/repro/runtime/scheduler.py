@@ -147,6 +147,7 @@ def _replay_events(
     master_decode_cost: float,
     share_arrival: Optional[np.ndarray] = None,
     compute_finish: Optional[np.ndarray] = None,
+    compute_scale: float = 1.0,
 ) -> _Replay:
     """The shared event loop: timestamps, subsets, and the decode search.
 
@@ -164,6 +165,13 @@ def _replay_events(
     semantics: arrival at ``share_delay``, completion one
     ``compute_delay`` later.
 
+    ``compute_scale`` multiplies every worker's compute delay — the
+    hook for heterogeneous-work comparisons, where one trace's
+    ``compute_delay`` is time per unit work and each construction's
+    per-worker work (Corollary 10; ``CostPrediction.compute_factor``)
+    sets the scale.  The default 1.0 keeps replays byte-identical to
+    the legacy semantics.
+
     With a link-resolved trace (``trace.link_delay`` set), a receiver's
     exchange completes at the max over its *incoming* links from the
     Phase-2 sender set rather than one scalar D2D delay; a dead
@@ -174,7 +182,9 @@ def _replay_events(
     share_at = trace.share_delay if share_arrival is None else share_arrival
     phase1_last = float(share_at[alive].max())
     finish_at = (
-        share_at + trace.compute_delay if compute_finish is None else compute_finish
+        share_at + compute_scale * trace.compute_delay
+        if compute_finish is None
+        else compute_finish
     )
 
     # Heap entries: (time, seq, kind, worker).
@@ -222,10 +232,13 @@ def _replay_events(
             # exchange leg is the max over the receiver's incoming
             # links from the sender set (its own diagonal entry is 0);
             # a dead incoming link starves the receiver's I(alpha_r)
-            # sum, so it never responds.
+            # sum, so it never responds.  Exchange messages all go out
+            # at the announcement, so a time-varying fabric resolves to
+            # the matrix in effect *now*.
+            link_now = trace.link_at(t_now)
             for r in np.flatnonzero(alive & ~trace.crash_after_phase2):
-                if trace.link_delay is not None:
-                    exchange = float(trace.link_delay[phase2_ids, r].max())
+                if link_now is not None:
+                    exchange = float(link_now[phase2_ids, r].max())
                     if not np.isfinite(exchange):
                         link_starved.append(int(r))
                         continue
@@ -335,6 +348,7 @@ def run_over_pool(
     seed: int = 0,
     verify_extras="auto",
     master_decode_cost: float = 0.0,
+    compute_scale: float = 1.0,
 ) -> EdgeRun:
     """Execute Y = A^T B over the simulated pool described by ``trace``.
 
@@ -356,7 +370,8 @@ def run_over_pool(
         return proto.degree_reduce(plan, h, rng, worker_ids=phase2_ids)
 
     res = _replay_events(
-        plan, trace, alive, compute_i_all, verify_extras, rng, master_decode_cost
+        plan, trace, alive, compute_i_all, verify_extras, rng,
+        master_decode_cost, compute_scale=compute_scale,
     )
     y = proto.assemble_y(plan, res.coeffs)
     return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
@@ -431,6 +446,7 @@ def run_batch_over_pool(
     axis: str = "workers",
     mode: str = "all_to_all",
     backend: str = "auto",
+    compute_scale: float = 1.0,
 ) -> BatchEdgeRun:
     """Replay a whole batch of products through ONE worker trace.
 
@@ -466,7 +482,8 @@ def run_batch_over_pool(
     )
 
     res = _replay_events(
-        plan, trace, alive, compute_i_all, verify_extras, rng, master_decode_cost
+        plan, trace, alive, compute_i_all, verify_extras, rng,
+        master_decode_cost, compute_scale=compute_scale,
     )
     y = _unfold_batched_y(plan, res.coeffs, batch)
 

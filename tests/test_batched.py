@@ -170,7 +170,9 @@ def test_plan_cache_hits():
     assert p3 is not p1
     assert planner.plan_cache_info()["size"] == 2
     planner.plan_cache_clear()
-    assert planner.plan_cache_info() == {"hits": 0, "misses": 0, "size": 0}
+    assert planner.plan_cache_info() == {
+        "hits": 0, "misses": 0, "replans": 0, "size": 0,
+    }
 
 
 def test_secure_matmul_batched_shared_weight():

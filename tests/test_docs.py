@@ -14,6 +14,7 @@ def test_required_docs_exist():
         "docs/protocol_engine.md",
         "docs/edge_runtime.md",
         "docs/kernel_design.md",
+        "docs/autoplanner.md",
     ):
         assert os.path.exists(os.path.join(ROOT, rel)), f"{rel} missing"
 

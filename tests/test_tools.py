@@ -1,0 +1,171 @@
+"""Repo tooling: the JAX-shim lint (`tools/check_api_shims.py`) and the
+benchmark drift diff (`tools/bench_diff.py`)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import bench_diff  # noqa: E402
+import check_api_shims  # noqa: E402
+
+
+# ----------------------------------------------------------------------
+# shim lint
+# ----------------------------------------------------------------------
+def test_repo_is_shim_clean():
+    assert check_api_shims.violations(ROOT) == []
+
+
+def _write(root, rel, text):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        fh.write(text)
+
+
+def test_lint_flags_attribute_import_and_getattr(tmp_path):
+    root = str(tmp_path)
+    _write(root, "src/bad_attr.py", "import jax\njax.shard_map(f)\n")
+    _write(root, "src/bad_from.py", "from jax import shard_map\n")
+    _write(root, "src/bad_getattr.py", 'x = getattr(pl, "CompilerParams")\n')
+    _write(root, "src/fine.py", "# shard_map only in this comment\nx = 1\n")
+    found = check_api_shims.violations(root)
+    flagged = {v[0] for v in found}
+    assert flagged == {
+        os.path.join("src", "bad_attr.py"),
+        os.path.join("src", "bad_from.py"),
+        os.path.join("src", "bad_getattr.py"),
+    }
+
+
+def test_lint_skips_the_sanctioned_shims(tmp_path):
+    root = str(tmp_path)
+    shim = os.path.join("src", "repro", "compat.py")
+    assert shim in check_api_shims.ALLOWED
+    _write(root, shim, "from jax import shard_map\n")
+    _write(root, "src/elsewhere.py", "from jax import shard_map\n")
+    flagged = {v[0] for v in check_api_shims.violations(root)}
+    assert flagged == {os.path.join("src", "elsewhere.py")}
+
+
+def test_lint_reports_unparsable_files(tmp_path):
+    root = str(tmp_path)
+    _write(root, "src/broken.py", "def broken(:\n")
+    found = check_api_shims.violations(root)
+    assert len(found) == 1 and "syntax" in found[0][2]
+
+
+def test_lint_cli_on_repo():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_api_shims.py"),
+         ROOT],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+# ----------------------------------------------------------------------
+# bench diff
+# ----------------------------------------------------------------------
+def test_flatten_paths():
+    flat = bench_diff.flatten({"a": {"b": [1.0, {"c_us": 2.0}]}, "d": "x"})
+    assert flat == {"a.b[0]": 1.0, "a.b[1].c_us": 2.0, "d": "x"}
+
+
+def test_leaf_classification():
+    assert bench_diff.is_wallclock("kernel.total_us")
+    assert bench_diff.is_wallclock("batched.us_per_product[3]")
+    assert bench_diff.is_ratio("pipelined.age.speedup")
+    assert not bench_diff.is_wallclock("scheme.n_workers")
+    assert not bench_diff.is_ratio("scheme.n_workers")
+
+
+def _git_repo_with_baseline(tmp_path, baseline):
+    root = str(tmp_path)
+    env = dict(os.environ, GIT_AUTHOR_NAME="t", GIT_AUTHOR_EMAIL="t@t",
+               GIT_COMMITTER_NAME="t", GIT_COMMITTER_EMAIL="t@t")
+    for cmd in (["git", "init", "-q"],
+                ["git", "add", "-A"],
+                ["git", "commit", "-q", "-m", "baseline"]):
+        if cmd[1] == "add":
+            _write(root, "BENCH.json", json.dumps(baseline))
+        subprocess.run(cmd, cwd=root, env=env, check=True,
+                       capture_output=True)
+    return root
+
+
+BASELINE = {
+    "deterministic": {"n_workers": 17, "speedup": 2.8},
+    "timing": {"total_us": 100.0, "decode_us": 40.0, "share_us": 10.0},
+}
+
+
+def test_bench_diff_passes_uniform_machine_speed_shift(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    fresh = json.loads(json.dumps(BASELINE))
+    for k in fresh["timing"]:
+        fresh["timing"][k] *= 2.0  # a uniformly slower machine
+    _write(root, "BENCH.json", json.dumps(fresh))
+    assert bench_diff.diff_file(root, "BENCH.json", "HEAD", band=2.5) == []
+
+
+def test_bench_diff_catches_deterministic_change(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    fresh = json.loads(json.dumps(BASELINE))
+    fresh["deterministic"]["n_workers"] = 18
+    _write(root, "BENCH.json", json.dumps(fresh))
+    problems = bench_diff.diff_file(root, "BENCH.json", "HEAD", band=2.5)
+    assert any("n_workers" in p for p in problems)
+
+
+def test_bench_diff_catches_wallclock_outlier(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    fresh = json.loads(json.dumps(BASELINE))
+    fresh["timing"]["decode_us"] *= 50.0  # one leaf regresses alone
+    _write(root, "BENCH.json", json.dumps(fresh))
+    problems = bench_diff.diff_file(root, "BENCH.json", "HEAD", band=2.5)
+    assert any("decode_us" in p for p in problems)
+
+
+def test_bench_diff_catches_ratio_drift(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    fresh = json.loads(json.dumps(BASELINE))
+    fresh["deterministic"]["speedup"] = 0.5  # 5.6x off, outside the band
+    _write(root, "BENCH.json", json.dumps(fresh))
+    problems = bench_diff.diff_file(root, "BENCH.json", "HEAD", band=2.5)
+    assert any("speedup" in p for p in problems)
+
+
+def test_bench_diff_catches_shape_change(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    fresh = json.loads(json.dumps(BASELINE))
+    del fresh["timing"]["share_us"]
+    fresh["new_section"] = {"x": 1}
+    _write(root, "BENCH.json", json.dumps(fresh))
+    problems = bench_diff.diff_file(root, "BENCH.json", "HEAD", band=2.5)
+    assert any("share_us" in p for p in problems)
+    assert any("new_section" in p for p in problems)
+
+
+def test_bench_diff_skips_missing_baseline(tmp_path):
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    _write(root, "OTHER.json", json.dumps({"a": 1}))
+    assert bench_diff.diff_file(root, "OTHER.json", "HEAD", band=2.5) == []
+
+
+def test_bench_diff_committed_snapshots_self_consistent():
+    """Both committed snapshots must diff clean against themselves via
+    the real git plumbing (guards the `git show` path)."""
+    for name in bench_diff.DEFAULT_FILES:
+        if bench_diff.committed_json(ROOT, name, "HEAD") is None:
+            continue  # snapshot not committed yet at this ref
+        with open(os.path.join(ROOT, name)) as fh:
+            fresh = json.load(fh)
+        committed = bench_diff.committed_json(ROOT, name, "HEAD")
+        if json.dumps(fresh, sort_keys=True) == json.dumps(
+            committed, sort_keys=True
+        ):
+            assert bench_diff.diff_file(ROOT, name, "HEAD", band=2.5) == []

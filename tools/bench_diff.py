@@ -1,0 +1,171 @@
+#!/usr/bin/env python
+"""Diff freshly regenerated BENCH_*.json against the committed snapshots.
+
+The benchmark JSONs mix two kinds of leaves:
+
+* **deterministic** — worker counts, seeded simulated completion times,
+  ratios of simulated times, decode-subset statistics, oracle flags.
+  These must match the committed snapshot *exactly*: a drift means the
+  protocol/runtime behaviour changed, not the machine.
+* **wall-clock** — ``*_us*`` microsecond timings measured on whatever
+  machine ran the benchmark.  These scale with machine speed, so each
+  fresh/committed ratio is normalized by the *median* ratio across all
+  wall-clock leaves (the machine-speed estimate) and must stay within a
+  tolerance band of it.  Pure wall-clock ratios (``speedup``,
+  ``amortization``) are already dimensionless and get the band directly.
+
+The committed baseline is read from git (``git show <ref>:<file>``), so
+the tool needs no extra snapshot files; run the benchmarks first, then
+this.  A missing baseline (file not in the ref) is reported and
+skipped — the commit that introduces a benchmark has nothing to diff.
+
+Usage: python tools/bench_diff.py [--ref HEAD] [--band 2.5]
+                                  [--files BENCH_protocol.json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_FILES = ("BENCH_protocol.json", "BENCH_edge.json")
+
+# Leaf-key fragments measured in host microseconds (machine-dependent).
+WALLCLOCK_MARKERS = ("_us", "us_per")
+# Dimensionless ratios of wall-clock measurements.
+RATIO_KEYS = {"speedup", "speedup_vs_pr1", "amortization"}
+
+
+def flatten(node, prefix="") -> dict:
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(flatten(v, f"{prefix}[{i}]"))
+    else:
+        out[prefix] = node
+    return out
+
+
+def leaf_key(path: str) -> str:
+    """Last dict key on the path (list indices stripped)."""
+    return path.rsplit(".", 1)[-1].split("[")[0]
+
+
+def is_wallclock(path: str) -> bool:
+    k = leaf_key(path)
+    return any(m in k for m in WALLCLOCK_MARKERS)
+
+
+def is_ratio(path: str) -> bool:
+    return leaf_key(path) in RATIO_KEYS
+
+
+def committed_json(root: str, name: str, ref: str):
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            cwd=root,
+            capture_output=True,
+            check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None
+    return json.loads(blob)
+
+
+def diff_file(root: str, name: str, ref: str, band: float) -> list:
+    """Return a list of problem strings for one benchmark file."""
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return [f"{name}: fresh file missing (run the benchmark first)"]
+    base = committed_json(root, name, ref)
+    if base is None:
+        print(f"{name}: no baseline at {ref}, skipping")
+        return []
+    with open(path) as f:
+        fresh = json.load(f)
+    fb, ff = flatten(base), flatten(fresh)
+
+    problems = []
+    for p in sorted(set(fb) - set(ff)):
+        problems.append(f"{name}: leaf removed: {p}")
+    for p in sorted(set(ff) - set(fb)):
+        problems.append(f"{name}: leaf added: {p}")
+
+    shared = sorted(set(fb) & set(ff))
+    ratios = []  # (path, fresh/committed) over wall-clock leaves
+    for p in shared:
+        old, new = fb[p], ff[p]
+        if is_wallclock(p):
+            if isinstance(old, (int, float)) and isinstance(new, (int, float)):
+                if old > 0 and new > 0:
+                    ratios.append((p, new / old))
+                elif (old > 0) != (new > 0):
+                    problems.append(
+                        f"{name}: {p}: wall-clock sign flip {old} -> {new}"
+                    )
+        elif is_ratio(p):
+            if old > 0 and not (1.0 / band <= new / old <= band):
+                problems.append(
+                    f"{name}: {p}: timing ratio {old} -> {new} drifted "
+                    f"beyond {band}x"
+                )
+        else:
+            same = (
+                abs(new - old) <= 1e-9 * max(1.0, abs(old))
+                if isinstance(old, float) and isinstance(new, float)
+                else old == new
+            )
+            if not same:
+                problems.append(
+                    f"{name}: {p}: deterministic leaf changed "
+                    f"{old!r} -> {new!r}"
+                )
+
+    if ratios:
+        med = sorted(r for _, r in ratios)[len(ratios) // 2]
+        for p, r in ratios:
+            if not (med / band <= r <= med * band):
+                problems.append(
+                    f"{name}: {p}: wall-clock ratio {r:.2f} outside "
+                    f"{band}x band around machine-speed median {med:.2f}"
+                )
+        print(
+            f"{name}: {len(ratios)} wall-clock leaves, machine-speed "
+            f"median {med:.2f}x vs baseline"
+        )
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ref", default="HEAD", help="git ref for the baseline")
+    ap.add_argument(
+        "--band",
+        type=float,
+        default=2.5,
+        help="allowed wall-clock spread around the machine-speed median",
+    )
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument(
+        "--root",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    args = ap.parse_args()
+
+    problems = []
+    for name in args.files:
+        problems.extend(diff_file(args.root, name, args.ref, args.band))
+    for msg in problems:
+        print(f"BENCH-DRIFT {msg}", file=sys.stderr)
+    print(f"checked {len(args.files)} files, {len(problems)} drifts")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Fail when version-drifting JAX API spellings leak out of the shims.
+
+JAX has renamed three APIs this repo depends on, and each rename is
+absorbed in exactly one place:
+
+* ``shard_map``        — ``jax.shard_map`` vs
+                          ``jax.experimental.shard_map.shard_map``
+                          (and ``check_vma`` vs ``check_rep``), shimmed
+                          in ``src/repro/compat.py``,
+* ``AxisType``         — ``jax.sharding.AxisType`` / the ``axis_types=``
+                          kwarg of ``jax.make_mesh``, probed in
+                          ``src/repro/launch/mesh.py``,
+* ``CompilerParams``   — ``pltpu.CompilerParams`` vs the older
+                          ``pltpu.TPUCompilerParams``, resolved in
+                          ``src/repro/kernels/modmatmul/kernel.py``.
+
+Any *other* module spelling these raw (an attribute access, a
+``from jax... import``, or a ``getattr(mod, "...")`` probe) reopens the
+version drift the shims exist to close.  This linter walks the AST of
+every Python file under src/, tests/, benchmarks/, examples/, and
+tools/ — comments and docstrings can mention the names freely; code
+cannot.  Importing the *shimmed* symbols (``repro.compat.shard_map``,
+``repro.launch.mesh`` helpers) is of course fine: only imports from
+``jax``-rooted modules and raw attribute/getattr spellings count.
+
+Usage: python tools/check_api_shims.py [repo_root]
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+# Attribute / import names that must only appear inside their shim.
+BANNED = {"shard_map", "AxisType", "CompilerParams", "TPUCompilerParams"}
+
+# The shim modules (relative to the repo root) allowed to spell them.
+ALLOWED = {
+    os.path.join("src", "repro", "compat.py"),
+    os.path.join("src", "repro", "launch", "mesh.py"),
+    os.path.join("src", "repro", "kernels", "modmatmul", "kernel.py"),
+}
+
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def _is_jax_module(name: str) -> bool:
+    return name == "jax" or name.startswith("jax.")
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self):
+        self.hits = []  # (lineno, description)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in BANNED:
+            self.hits.append((node.lineno, f"attribute .{node.attr}"))
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            parts = set(alias.name.split("."))
+            if parts & BANNED:
+                self.hits.append((node.lineno, f"import {alias.name}"))
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        mod_parts = set(mod.split("."))
+        if mod_parts & BANNED:
+            self.hits.append((node.lineno, f"from {mod} import ..."))
+        elif _is_jax_module(mod):
+            for alias in node.names:
+                if alias.name in BANNED:
+                    self.hits.append(
+                        (node.lineno, f"from {mod} import {alias.name}")
+                    )
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        # getattr(mod, "CompilerParams") probes re-open the drift too.
+        func = node.func
+        if isinstance(func, ast.Name) and func.id == "getattr":
+            for arg in node.args[1:]:
+                if isinstance(arg, ast.Constant) and arg.value in BANNED:
+                    self.hits.append(
+                        (node.lineno, f'getattr(..., "{arg.value}")')
+                    )
+        self.generic_visit(node)
+
+
+def python_files(root: str) -> list:
+    files = []
+    for d in SCAN_DIRS:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, _, names in os.walk(top):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    files.append(os.path.join(dirpath, name))
+    return sorted(files)
+
+
+def violations(root: str) -> list:
+    out = []
+    for path in python_files(root):
+        rel = os.path.relpath(path, root)
+        if rel in ALLOWED:
+            continue
+        with open(path) as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError as exc:
+            out.append((rel, exc.lineno or 0, f"syntax error: {exc.msg}"))
+            continue
+        visitor = _Visitor()
+        visitor.visit(tree)
+        out.extend((rel, lineno, what) for lineno, what in visitor.hits)
+    return out
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))
+    )
+    files = python_files(root)
+    if not files:
+        print("no python files found", file=sys.stderr)
+        return 1
+    bad = violations(root)
+    for rel, lineno, what in bad:
+        print(
+            f"SHIM-BYPASS {rel}:{lineno}: {what} — route through "
+            f"repro.compat / repro.launch.mesh / the pallas kernel shim",
+            file=sys.stderr,
+        )
+    print(f"checked {len(files)} files, {len(bad)} shim bypasses")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
