@@ -51,6 +51,15 @@ Five extra sections ride along:
                           reports makespan vs the back-to-back
                           sequential replays, pipeline occupancy, and
                           the Phase-1/Phase-2 overlap reclaimed,
+* ``byzantine``        — detect (confirm-and-retry) vs correct
+                          (Berlekamp-Welch) corruption handling replayed
+                          on byte-identical traces as the configured
+                          corruption rate sweeps 0 -> 25%: per-rate p50
+                          completion, responder overhead over the bare
+                          decode threshold (thr + 2e vs thr + extras +
+                          retries), decode failures, and the rate at
+                          which correction's p50 crosses below
+                          detection's,
 * ``adaptive``         — the ``AutoPlanner`` feedback loop vs every
                           static candidate construction on
                           byte-identical traces, in two drifting
@@ -92,6 +101,7 @@ from repro.runtime import (
     AsymmetricLinks,
     AutoPlanner,
     ClusteredEdge,
+    DecodeFailure,
     Deterministic,
     ElasticPool,
     FaultSpec,
@@ -99,6 +109,7 @@ from repro.runtime import (
     ShiftedExponential,
     TimeVaryingLinks,
     UniformLinks,
+    observed_run,
     run_adaptive_over_pool,
     run_batch_over_pool,
     run_over_pool,
@@ -395,6 +406,123 @@ def _adaptive_report(field, m) -> dict:
     return {"degrading_links": degrading, "elastic_pool": elastic}
 
 
+# Byzantine sweep: configured corruption rates and replays per rate.
+BYZANTINE_RATES = (0.0, 0.05, 0.10, 0.15, 0.20, 0.25)
+BYZANTINE_RUNS = 6
+
+
+def _byzantine_report(plans, field, rng, m, pool, n_runs=BYZANTINE_RUNS) -> dict:
+    """Detect vs correct corruption handling on byte-identical traces.
+
+    For each configured corruption rate the SAME sampled traces replay
+    under both strategies (``decode_mode="detect"`` resolves one extra
+    confirming witness; ``"correct"`` resolves the error budget ``e``
+    from the configured rate and waits for ``thr + 2e`` responders),
+    so the comparison isolates the decode strategy.  Reported per rate:
+    p50 completion, mean responder overhead over the bare threshold
+    (the worker price of each strategy), detected/corrected counts, and
+    decode failures; per method, the lowest rate at which correction's
+    p50 completion crosses below detection's.
+    """
+    a = field.random(rng, (m, m))
+    b = field.random(rng, (m, m))
+    want = field.matmul(a.T, b)
+    latency = ShiftedExponential(shift=1.0, scale=1.0)
+    out = {
+        "rates": list(BYZANTINE_RATES),
+        "strategies": ["detect", "correct"],
+        "runs_per_rate": n_runs,
+    }
+    rows = []
+    for meth, plan in plans.items():
+        thr = plan.decode_threshold
+        per_rate = []
+        for rate in BYZANTINE_RATES:
+            faults = FaultSpec(corrupt_frac=rate)
+            # one trace set per rate, replayed by BOTH strategies (and
+            # both methods share the pool-sized prefix, like the
+            # scenario section)
+            traces = [
+                sample_trace(
+                    pool, latency, faults, seed=6000 + round(rate * 100) * 31 + i
+                )
+                for i in range(n_runs)
+            ]
+            entry = {"corrupt_frac": rate}
+            for strategy in ("detect", "correct"):
+                results = []
+                failures = 0
+                for run_i, trace in enumerate(traces):
+                    try:
+                        res = run_over_pool(
+                            plan, a, b, trace, seed=run_i, decode_mode=strategy
+                        )
+                    except DecodeFailure:
+                        failures += 1
+                        continue
+                    if not np.array_equal(res.y, want):
+                        raise AssertionError(
+                            f"{meth}/byzantine rate={rate} run {run_i} "
+                            f"({strategy}): decode disagrees with oracle"
+                        )
+                    results.append(res.metrics)
+                responses = [observed_run(r).thr_arrived for r in results]
+                agg = summarize(results)
+                entry[strategy] = {
+                    "completion_p50": round(agg.get("completion_p50", float("nan")), 4),
+                    "responses_mean": round(float(np.mean(responses)), 2)
+                    if responses
+                    else None,
+                    "worker_overhead_mean": round(
+                        float(np.mean(responses)) - thr, 2
+                    )
+                    if responses
+                    else None,
+                    "rejected_total": agg.get("rejected_total", 0),
+                    "corrected_total": agg.get("corrected_total", 0),
+                    "decode_failures": failures,
+                    "oracle_validated": True,
+                }
+            d_p50 = entry["detect"]["completion_p50"]
+            c_p50 = entry["correct"]["completion_p50"]
+            entry["correct_over_detect_p50"] = (
+                round(c_p50 / d_p50, 4) if d_p50 else None
+            )
+            per_rate.append(entry)
+            for strategy in ("detect", "correct"):
+                rows.append(
+                    {
+                        "method": meth,
+                        "corrupt_frac": rate,
+                        "strategy": strategy,
+                        "completion_p50": entry[strategy]["completion_p50"],
+                        "worker_overhead_mean": entry[strategy][
+                            "worker_overhead_mean"
+                        ],
+                        "decode_failures": entry[strategy]["decode_failures"],
+                    }
+                )
+            # first configured rate where correction's p50 completion is
+            # no worse than detection's (None: detection never crossed)
+        crossover = next(
+            (
+                e["corrupt_frac"]
+                for e in per_rate
+                if e["corrupt_frac"] > 0
+                and e["correct_over_detect_p50"] is not None
+                and e["correct_over_detect_p50"] <= 1.0
+            ),
+            None,
+        )
+        out[meth] = {
+            "decode_threshold": thr,
+            "per_rate": per_rate,
+            "p50_crossover_rate": crossover,
+        }
+    write_csv("edge_byzantine", rows)
+    return out
+
+
 def _batched_replay_report(plans, field, rng, m) -> dict:
     """Per-method amortization of the batched replay vs a run loop."""
     a = field.random(rng, (BATCH_REPLAY, m, m))
@@ -603,6 +731,7 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
         "per_link": _per_link_report(plans, field, rng, m, pool, n_runs=n_runs),
         "pipelined": _pipeline_report(plans, field, rng, m, pool),
         "adaptive": _adaptive_report(field, m),
+        "byzantine": _byzantine_report(plans, field, rng, m, pool),
         "batched_replay": _batched_replay_report(plans, field, rng, m),
         "sharded_batched": _sharded_report(),
         "subset_cache": subset_cache_info(),

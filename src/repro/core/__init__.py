@@ -9,9 +9,16 @@ Layers (bottom-up):
 * ``closed_form``    — Theorems 2 & 8 + baseline worker counts / overheads
 * ``planner``        — CMPCPlan: evaluation points, interpolation matrices
 * ``protocol``       — the 3-phase protocol engine (jit-able, vmapped)
+* ``bw_decode``      — Berlekamp-Welch error-correcting Phase-3 decode
 * ``distributed``    — shard_map execution over a worker mesh axis
 * ``layers``         — secure_matmul / PrivateLinear high-level API
 """
+from .bw_decode import (  # noqa: F401
+    BWDecodeError,
+    bw_decode_evals,
+    bw_interpolate,
+    bw_system_size,
+)
 from .closed_form import (  # noqa: F401
     CostPrediction,
     age_gamma,

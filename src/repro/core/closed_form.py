@@ -269,6 +269,22 @@ class CostPrediction:
     compute: int  # scalar mults per worker (Corollary 10)
     storage: int  # scalars stored per worker (Corollary 11)
     comm: int  # scalars exchanged among workers, Phase 2 (Corollary 12)
+    # Adversarial accounting: with up to ``n_errors`` Byzantine workers
+    # a Berlekamp-Welch decode needs ``decode_threshold + 2e`` responses
+    # (Reed-Solomon distance), so the construction must provision
+    # ``N + 2e`` workers to keep its straggler margin.  ``n_errors=0``
+    # reproduces the fault-free prediction exactly.
+    n_errors: int = 0
+
+    @property
+    def n_adversarial(self) -> int:
+        """Workers needed with ``n_errors`` Byzantine among them: N + 2e."""
+        return self.n_workers + 2 * self.n_errors
+
+    @property
+    def decode_responses(self) -> int:
+        """Responses a correcting decode waits for: ``thr + 2e``."""
+        return self.decode_threshold + 2 * self.n_errors
 
     def compute_factor(self, reference: "CostPrediction") -> float:
         """Per-worker compute relative to another prediction — the
@@ -277,7 +293,7 @@ class CostPrediction:
         return self.compute / max(reference.compute, 1)
 
 
-def predict(config, m: int, pool_size: int = None) -> CostPrediction:
+def predict(config, m: int, pool_size: int = None, e: int = 0) -> CostPrediction:
     """Unified cost-model entry: ``PlanConfig``-shaped config -> costs.
 
     ``config`` needs attributes ``method, s, t, z, lam, n_spare``
@@ -286,20 +302,31 @@ def predict(config, m: int, pool_size: int = None) -> CostPrediction:
     ``pool_size`` the spare count is re-accounted against that physical
     pool (``n_total = pool_size``) instead of ``config.n_spare`` —
     the elastic-pool form planners use.
+
+    ``e`` is the Byzantine error budget: a correcting decode needs
+    ``decode_threshold + 2e`` responses, so the adversarial worker
+    count is ``N + 2e`` (``CostPrediction.n_adversarial``) — what the
+    auto-planner prices error correction against confirm-and-retry
+    with.  A pool too small to seat ``N + 2e`` raises, mirroring the
+    fault-free seating check.
     """
     from .constructions import get_construction  # deferred: cycle-free
 
     ctor = get_construction(config.method)
     n = ctor.n_workers(config.s, config.t, config.z, config.lam)
+    e = int(e)
+    if e < 0:
+        raise ValueError("error budget e must be >= 0")
+    n_adv = n + 2 * e
     if pool_size is not None:
-        if pool_size < n:
+        if pool_size < n_adv:
             raise ValueError(
                 f"pool of {pool_size} cannot seat {config.method} "
-                f"(needs {n} workers)"
+                f"(needs {n} workers + 2e = {n_adv} under e={e} errors)"
             )
         n_total = pool_size
     else:
-        n_total = n + config.n_spare
+        n_total = n_adv + config.n_spare
     s, t, z = config.s, config.t, config.z
     return CostPrediction(
         n_workers=n,
@@ -308,4 +335,5 @@ def predict(config, m: int, pool_size: int = None) -> CostPrediction:
         compute=computation_overhead(m, s, t, z, n),
         storage=storage_overhead(m, s, t, z, n),
         comm=communication_overhead(m, t, n),
+        n_errors=e,
     )

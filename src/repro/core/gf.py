@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -177,6 +178,99 @@ class Field:
 
     def inv_matrix(self, a: np.ndarray) -> np.ndarray:
         return self.solve(a, np.eye(a.shape[0], dtype=np.int64))
+
+    def solve_any(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """One solution of a @ x = b (mod p) for a general [m, n] system.
+
+        Unlike :meth:`solve`, ``a`` may be rectangular or rank-deficient:
+        Gauss-Jordan runs column by column, free variables are pinned to
+        zero, and a zero row of the reduced ``a`` with a nonzero reduced
+        ``b`` raises ``ValueError`` (inconsistent system).  This is what
+        the Berlekamp-Welch decoder needs — its key system is
+        deliberately overdetermined (``thr + 2e`` unknowns, more
+        equations) and singular whenever fewer than ``e`` errors actually
+        occurred, where *any* particular solution is a valid decode.
+        """
+        a = self.asarray(a).copy()
+        b = self.asarray(b).copy()
+        m, n = a.shape
+        if b.ndim == 1:
+            b = b[:, None]
+            squeeze = True
+        else:
+            squeeze = False
+        if b.shape[0] != m:
+            raise ValueError(f"rhs has {b.shape[0]} rows, lhs has {m}")
+        pivots = []
+        row = 0
+        for col in range(n):
+            if row >= m:
+                break
+            piv = None
+            for r in range(row, m):
+                if a[r, col] != 0:
+                    piv = r
+                    break
+            if piv is None:
+                continue  # free column
+            if piv != row:
+                a[[row, piv]] = a[[piv, row]]
+                b[[row, piv]] = b[[piv, row]]
+            inv = self.inv(a[row, col])
+            a[row] = (a[row] * inv) % self.p
+            b[row] = (b[row] * inv) % self.p
+            for r in range(m):
+                if r != row and a[r, col] != 0:
+                    f = a[r, col]
+                    a[r] = (a[r] - f * a[row]) % self.p
+                    b[r] = (b[r] - f * b[row]) % self.p
+            pivots.append(col)
+            row += 1
+        if row < m and np.any(b[row:] != 0):
+            raise ValueError("inconsistent linear system mod p")
+        x = np.zeros((n, b.shape[1]), np.int64)
+        if pivots:
+            x[np.asarray(pivots)] = b[: len(pivots)]
+        return x[:, 0] if squeeze else x
+
+    def poly_divmod(
+        self, num: np.ndarray, den: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Polynomial division mod p on ascending coefficient vectors.
+
+        Returns (quotient, remainder) with ``num = quotient * den +
+        remainder`` and ``deg(remainder) < deg(den)``.  ``den`` need not
+        be monic (its leading coefficient is inverted once).
+        """
+        num = self.asarray(num).copy()
+        den = self.asarray(den)
+        d = int(den.size) - 1
+        while d > 0 and den[d] == 0:
+            d -= 1
+        if den[d] == 0:
+            raise ZeroDivisionError("division by the zero polynomial")
+        lead_inv = self.inv(den[d])
+        n = int(num.size) - 1
+        if n < d:
+            return np.zeros(1, np.int64), num
+        quo = np.zeros(n - d + 1, np.int64)
+        for k in range(n - d, -1, -1):
+            c = (num[k + d] * lead_inv) % self.p
+            if c:
+                quo[k] = c
+                num[k : k + d + 1] = (num[k : k + d + 1] - c * den[: d + 1]) % self.p
+        rem = num[:d] if d > 0 else np.zeros(1, np.int64)
+        return quo, rem
+
+    def poly_eval(self, coeffs: np.ndarray, xs: np.ndarray) -> np.ndarray:
+        """Evaluate an ascending-coefficient polynomial at points xs
+        (Horner, vectorized over the points)."""
+        coeffs = self.asarray(coeffs)
+        xs = self.asarray(xs)
+        out = np.zeros_like(xs)
+        for c in coeffs[::-1]:
+            out = (out * xs + c) % self.p
+        return out
 
     # ------------------------------------------------------------------
     # fixed-point quantisation (real <-> field)

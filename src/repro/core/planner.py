@@ -147,6 +147,28 @@ class CMPCPlan:
             return self.decode_w
         return self._subset_cached("dec", ids, self.decode_matrix)
 
+    def bw_decode_matrices(self, worker_ids: Sequence[int], e: int) -> np.ndarray:
+        """Vandermonde block behind the Berlekamp-Welch key system for a
+        responder subset: ``V[i, j] = alphas[ids[i]] ** j`` on powers
+        ``0..thr+e-1``.  Columns ``0..thr+e-1`` are the Q(x) block, its
+        first ``e`` columns double as the low-order error-locator block,
+        and column ``e`` carries the monic ``x^e`` term — one matrix
+        serves the whole system.  Rows follow the given (arrival) order;
+        cached per ``(subset order, e)`` alongside the decode/check
+        caches, so the recurring fastest ``thr + 2e`` responders pay one
+        power-table build total.
+        """
+        ids = np.asarray(worker_ids)
+        e = int(e)
+        if e < 0:
+            raise ValueError("error budget e must be >= 0")
+        width = self.decode_threshold + e
+
+        def build(ids_arr: np.ndarray) -> np.ndarray:
+            return self.field.vandermonde(self.alphas[ids_arr], range(width))
+
+        return self._subset_cached(f"bw{e}", ids, build)
+
     def _subset_cached(self, kind: str, ids: np.ndarray, build) -> np.ndarray:
         cache = self.__dict__.get("_subset_cache")
         if cache is None:

@@ -294,6 +294,33 @@ def reconstruct(
     return assemble_y(plan, coeffs)
 
 
+def reconstruct_corrected(
+    plan: CMPCPlan,
+    i_evals: jnp.ndarray,
+    worker_ids: Sequence[int],
+    e: int,
+    rng: Optional[np.random.Generator] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Byzantine-tolerant reconstruction: decode Y from ``thr + 2e``
+    responses of which up to ``e`` may be arbitrarily corrupted.
+
+    The error-correcting counterpart of :func:`reconstruct` —
+    Berlekamp-Welch over the responder subset instead of plain
+    interpolation (see :mod:`repro.core.bw_decode`).  Returns
+    ``(y, corrected_ids)`` where ``corrected_ids`` names the responders
+    identified as corrupt; raises
+    :class:`~repro.core.bw_decode.BWDecodeError` past the budget.
+    """
+    from .bw_decode import bw_decode_evals  # deferred: keeps import light
+
+    evals = np.asarray(i_evals)
+    coeffs, corrected = bw_decode_evals(
+        plan, evals.reshape(evals.shape[0], -1), np.asarray(worker_ids), e,
+        rng=rng,
+    )
+    return assemble_y(plan, coeffs), corrected
+
+
 def reconstruct_coded_only(
     plan: CMPCPlan, h: jnp.ndarray, worker_ids: Optional[Sequence[int]] = None
 ) -> np.ndarray:

@@ -15,7 +15,11 @@ setting: heterogeneous, flaky edge workers.
                    ``n_workers`` for Phase 2, decode from the fastest
                    ``decode_threshold`` responders (with consistency
                    verification against extra responders when corruption
-                   is possible); ``run_batch_over_pool`` replays a whole
+                   is possible, or Byzantine error *correction* via
+                   ``decode_mode="correct"`` — one Berlekamp-Welch decode
+                   over the fastest ``thr + 2e`` responders that also
+                   names the corrupt workers);
+                   ``run_batch_over_pool`` replays a whole
                    batch of products through one trace — event loop and
                    decode-subset search amortized across the batch — and
                    with a mesh drives the real ``shard_map`` Phase-2
@@ -63,6 +67,7 @@ from .pool import (  # noqa: F401
     sample_trace,
 )
 from .scheduler import (  # noqa: F401
+    DEFAULT_SUBSET_TRIES,
     BatchEdgeRun,
     DecodeFailure,
     EdgeRun,

@@ -96,6 +96,14 @@ class AutoPlanner:
     delay is time per unit work; observed set times are normalized by
     the same factor before entering the order-stat fit, so runs of
     *different* constructions still train one pool estimate.
+
+    ``decode_mode``: the runtime's corruption-handling strategy the
+    planner prices and tunes.  ``"detect"`` prices the decode wait one
+    confirming witness deeper once corruption is observed; ``"correct"``
+    prices the Berlekamp-Welch wait ``thr + 2e`` with the error budget
+    ``e`` fitted from the observed corruption rate
+    (:meth:`error_budget`); ``"auto"`` prices whichever is cheaper per
+    candidate.
     """
 
     def __init__(
@@ -104,9 +112,16 @@ class AutoPlanner:
         window: int = 12,
         explore_ratio: float = 2.0,
         cost_m: Optional[int] = None,
+        decode_mode: str = "detect",
     ):
         if not candidates:
             raise ValueError("need at least one candidate PlanConfig")
+        if decode_mode not in ("detect", "correct", "auto"):
+            raise ValueError(
+                f"decode_mode must be 'detect', 'correct', or 'auto', "
+                f"got {decode_mode!r}"
+            )
+        self.decode_mode = decode_mode
         seen: Dict[str, PlanConfig] = {}
         for c in candidates:
             seen.setdefault(c.resolved().label(), c.resolved())
@@ -155,12 +170,49 @@ class AutoPlanner:
         key = (config.resolved().label(), int(pool_size))
         return self._obs.setdefault(key, deque(maxlen=self.window))
 
+    # -- corruption tuning ---------------------------------------------
+    def verify_extras_for(self, est: Optional[PoolEstimate] = None) -> int:
+        """Confirming witnesses the planner would demand in ``"detect"``
+        mode: one as soon as any corruption has been observed."""
+        est = est or self.estimate()
+        return 1 if est.corrupt_rate > 0 else 0
+
+    def error_budget(
+        self, config: PlanConfig, pool_size: int,
+        est: Optional[PoolEstimate] = None,
+    ) -> int:
+        """Error budget ``e`` the planner would provision for a
+        ``"correct"``-mode replay of ``config`` on ``pool_size``:
+        the expected corrupt responder count under the fitted
+        corruption rate, capped at what the pool can afford
+        (``(pool_size - thr) // 2``)."""
+        est = est or self.estimate()
+        if est.corrupt_rate <= 0:
+            return 0
+        n_live = int(np.floor(pool_size * (1.0 - est.dropout_rate)))
+        n_recv = int(np.floor(n_live * (1.0 - est.crash_rate)))
+        cap = (pool_size - config.decode_threshold) // 2
+        want = int(np.ceil(est.corrupt_rate * n_recv))
+        return max(0, min(want, cap))
+
     # -- scoring -------------------------------------------------------
-    def _threshold(self, config: PlanConfig, est: PoolEstimate) -> int:
-        # When corruption has been observed the master withholds
-        # acceptance for a confirming witness, so the effective decode
-        # wait is one responder deeper into the tail.
-        return config.decode_threshold + (1 if est.corrupt_rate > 0 else 0)
+    def _threshold(
+        self, config: PlanConfig, est: PoolEstimate, pool_size: int
+    ) -> int:
+        # Price of the decode wait under the planner's decode mode.
+        # "detect": corruption observed -> the master withholds
+        # acceptance for a confirming witness, one responder deeper
+        # into the tail.  "correct": the BW decode waits for
+        # thr + 2e responders at the fitted budget.  "auto": whichever
+        # wait is shallower (the runtime resolves the same way).
+        thr = config.decode_threshold
+        detect = thr + self.verify_extras_for(est)
+        if self.decode_mode == "detect":
+            return detect
+        correct = thr + 2 * self.error_budget(config, pool_size, est)
+        if self.decode_mode == "correct":
+            return correct
+        return min(detect, correct)
 
     def _model(
         self, config: PlanConfig, pool_size: int, est: PoolEstimate
@@ -175,7 +227,7 @@ class AutoPlanner:
             config.n_workers, n_live, est.ready_shift, est.ready_scale
         )
         n_recv = int(np.floor(n_live * (1.0 - est.crash_rate)))
-        thr = self._threshold(config, est)
+        thr = self._threshold(config, est, pool_size)
         if thr > n_recv:
             return float("inf")
         return t_set + order_stat_mean(
@@ -291,6 +343,7 @@ class AutoPlanner:
             ],
             "switches": self.n_switches,
             "respares": self.n_respares,
+            "decode_mode": self.decode_mode,
             "estimate": {
                 "ready_shift": est.ready_shift,
                 "ready_scale": est.ready_scale,
@@ -341,6 +394,7 @@ def run_adaptive_over_pool(
     field=None,
     plan_seed: int = 0,
     compute_scale="auto",
+    decode_mode: str = "detect",
 ) -> AdaptiveRun:
     """Replay-by-replay feedback loop over a (possibly elastic) pool.
 
@@ -357,6 +411,15 @@ def run_adaptive_over_pool(
     ``compute_scale``: ``"auto"`` scales each replay's worker compute
     by the chosen construction's work factor (1.0 for planners without
     ``cost_m``); a float forces one scale for every replay.
+
+    ``decode_mode``: the corruption-handling strategy, *tuned per
+    replay* by the planner: the error budget for ``"correct"``/
+    ``"auto"`` comes from :meth:`AutoPlanner.error_budget` (the fitted
+    corruption rate), and once corruption has been observed the planner
+    forces at least one confirming witness in ``"detect"`` mode even
+    when ``verify_extras="auto"`` would resolve lower.  Until the
+    planner has observations, both fall back to the trace's configured
+    fault model.
     """
     traces = list(traces)
     if not traces:
@@ -391,15 +454,26 @@ def run_adaptive_over_pool(
             if compute_scale == "auto"
             else float(compute_scale)
         )
+        # Planner-tuned corruption handling: once the estimator has
+        # seen corruption, its fitted rate sets the error budget
+        # (correct) and forces a confirming witness (detect); with no
+        # observations yet, "auto" falls back to the trace's configured
+        # fault model inside the runtime.
+        e_k = planner.error_budget(decision.config, trace.n)
+        extras_k = verify_extras
+        if verify_extras == "auto" and planner.verify_extras_for() > 0:
+            extras_k = planner.verify_extras_for()
         run: BatchEdgeRun = run_batch_over_pool(
             plan,
             a[idx],
             b[idx],
             trace,
             seed=_replay_seed(seed, idx),
-            verify_extras=verify_extras,
+            verify_extras=extras_k,
             master_decode_cost=master_decode_cost,
             compute_scale=scale,
+            decode_mode=decode_mode,
+            error_budget=e_k if e_k > 0 else "auto",
         )
         planner.observe(decision.config, run.metrics)
         ys.append(run.y)

@@ -40,6 +40,11 @@ class RunMetrics:
     rejected_ids: np.ndarray  # responders detected as corrupt
     trace: Trace  # communication (elements + bytes views)
     batch: int = 1  # products served by this replay (batched runtime)
+    # Berlekamp-Welch-identified corrupt responders whose errors the
+    # decode corrected (decode_mode="correct"); empty under "detect".
+    corrected_workers: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.array([], np.int64)
+    )
 
     @property
     def effective_workers(self) -> int:
@@ -48,6 +53,13 @@ class RunMetrics:
             np.union1d(np.union1d(self.phase2_ids, self.responder_ids),
                        self.confirmed_by).size
         )
+
+    @property
+    def observed_corrupt(self) -> int:
+        """Responders caught misbehaving, either strategy: detected and
+        discarded (``rejected_ids``) or BW-corrected
+        (``corrected_workers``)."""
+        return int(self.rejected_ids.size + self.corrected_workers.size)
 
     @property
     def decode_subset_key(self) -> Tuple[int, ...]:
@@ -107,6 +119,7 @@ def summarize(runs: List[RunMetrics]) -> Dict:
         "n_provisioned": runs[0].n_provisioned,
         "dropped_mean": float(np.mean([r.n_dropped for r in runs])),
         "rejected_total": int(sum(r.rejected_ids.size for r in runs)),
+        "corrected_total": int(sum(r.corrected_workers.size for r in runs)),
         "decode_subsets_distinct": len(subsets),
         "decode_subsets_top": [
             {"subset": list(k), "count": c} for k, c in top
@@ -196,6 +209,7 @@ class ObservedRun:
     completion: float
     n_dropped: int
     n_rejected: int
+    n_corrected: int = 0  # BW-corrected responders (decode_mode="correct")
 
 
 def observed_run(m: RunMetrics, start: float = 0.0) -> ObservedRun:
@@ -207,6 +221,7 @@ def observed_run(m: RunMetrics, start: float = 0.0) -> ObservedRun:
         n_ready_pool=n_live,
         thr_arrived=int(
             m.responder_ids.size + m.confirmed_by.size + m.rejected_ids.size
+            + m.corrected_workers.size
         ),
         n_receivers=n_live - m.n_crashed,
         set_time=float(m.phase2_set_time - start),
@@ -214,6 +229,7 @@ def observed_run(m: RunMetrics, start: float = 0.0) -> ObservedRun:
         completion=float(m.completion_time - start),
         n_dropped=m.n_dropped,
         n_rejected=int(m.rejected_ids.size),
+        n_corrected=int(m.corrected_workers.size),
     )
 
 
@@ -302,6 +318,7 @@ def estimate_pool(runs: Sequence[ObservedRun]) -> PoolEstimate:
         dropout_rate=sum(r.n_dropped for r in runs) / max(pool, 1),
         crash_rate=sum(r.n_ready_pool - r.n_receivers for r in runs)
         / max(sum(r.n_ready_pool for r in runs), 1),
-        corrupt_rate=sum(r.n_rejected for r in runs) / max(recv, 1),
+        corrupt_rate=sum(r.n_rejected + r.n_corrected for r in runs)
+        / max(recv, 1),
         n_runs=len(runs),
     )

@@ -52,10 +52,13 @@ from ..core.planner import CMPCPlan
 from .metrics import PipelineMetrics, RunMetrics
 from .pool import WorkerTrace
 from .scheduler import (
+    DEFAULT_SUBSET_TRIES,
     _batched_compute_closure,
     _build_metrics,
     _check_pool,
     _replay_events,
+    _resolve_decode_mode,
+    _resolve_error_budget,
     _resolve_verify_extras,
     _unfold_batched_y,
 )
@@ -124,6 +127,9 @@ def run_pipeline_over_pool(
     planner=None,
     plan_seed: int = 0,
     compute_scale="auto",
+    decode_mode: str = "detect",
+    error_budget="auto",
+    max_subset_tries: int = DEFAULT_SUBSET_TRIES,
 ) -> PipelineRun:
     """Run K batched replays through the pool with overlapping traces.
 
@@ -153,6 +159,11 @@ def run_pipeline_over_pool(
     planner's per-construction work factor when a planner is given
     (different constructions do different per-worker work on the same
     trace) and to 1.0 otherwise; pass a float to force one scale.
+
+    ``decode_mode`` / ``error_budget`` / ``max_subset_tries``: the
+    corruption-handling knobs of ``run_over_pool``, resolved *per
+    replay* against each trace's configured fault model (replays in one
+    pipeline may face differently-provisioned fault draws).
 
     Randomness: replay k draws from ``default_rng([seed, k])`` and the
     folded JAX key, so replays are independent but the whole pipeline
@@ -215,6 +226,8 @@ def run_pipeline_over_pool(
             )
         alive = _check_pool(plan_k, trace)
         extras_k = _resolve_verify_extras(verify_extras, trace)
+        budget_k = _resolve_error_budget(error_budget, trace, plan_k)
+        mode_k = _resolve_decode_mode(decode_mode, budget_k)
         rng = np.random.default_rng([seed, k])
         if compute_scale == "auto":
             scale_k = (
@@ -252,6 +265,9 @@ def run_pipeline_over_pool(
             master_decode_cost,
             share_arrival=arrive,
             compute_finish=finish,
+            decode_mode=mode_k,
+            error_budget=budget_k,
+            max_subset_tries=max_subset_tries,
         )
         # Straggler cancellation: a worker outside replay k's Phase-2
         # set abandons its (now useless) H-compute when the set is

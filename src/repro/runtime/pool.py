@@ -250,6 +250,14 @@ class WorkerTrace:
     # ``TimeVaryingLinks.apply`` (explicit matrices, no extra random
     # draws, so the pre-degradation replay is byte-identical).
     link_schedule: Optional[Tuple[Tuple[float, np.ndarray], ...]] = None
+    # The *configured* fault model this trace was sampled under — what
+    # the master legitimately knows about the pool (it provisioned it),
+    # as opposed to the sampled fault flags above, which are ground
+    # truth the master must never peek at.  ``verify_extras="auto"`` and
+    # ``error_budget="auto"`` resolve from this; ``None`` means "no
+    # fault model declared" (hand-built traces), which resolves to no
+    # protection.
+    fault_model: Optional[FaultSpec] = None
 
     @property
     def n(self) -> int:
@@ -257,7 +265,7 @@ class WorkerTrace:
 
     def __post_init__(self):
         for f in dataclasses.fields(self):
-            if f.name in ("link_delay", "link_schedule"):
+            if f.name in ("link_delay", "link_schedule", "fault_model"):
                 continue
             arr = getattr(self, f.name)
             if arr.shape != (self.n,):
@@ -302,6 +310,8 @@ class WorkerTrace:
                 out[f.name] = None
             elif f.name == "link_schedule":
                 out[f.name] = tuple((s, m.copy()) for s, m in arr)
+            elif f.name == "fault_model":
+                out[f.name] = arr  # frozen spec, shared by reference
             else:
                 out[f.name] = arr.copy()
         return out
@@ -336,6 +346,8 @@ class WorkerTrace:
                 out[f.name] = tuple(
                     (s, m[np.ix_(idx, idx)].copy()) for s, m in arr
                 )
+            elif f.name == "fault_model":
+                out[f.name] = arr  # pool-level configuration, id-free
             else:
                 out[f.name] = arr[idx].copy()
         return WorkerTrace(**out)
@@ -428,13 +440,32 @@ class WorkerTrace:
         straggler_ids: Sequence[int] = (),
         straggler_slowdown: float = 10.0,
     ) -> "WorkerTrace":
-        """Deterministic fault placement on explicit worker indices."""
+        """Deterministic fault placement on explicit worker indices.
+
+        Explicit placement is a *configuration* act, so the trace's
+        ``fault_model`` is updated to admit at least the placed fraction
+        of each fault class: the master learns "corruption is possible
+        on this pool" (which it would know, having configured it), never
+        *which* workers the flags landed on.
+        """
         out = self._copy_fields()
-        out["dropout"][self._checked_ids("dropout_ids", dropout_ids)] = True
-        out["crash_after_phase2"][self._checked_ids("crash_ids", crash_ids)] = True
-        out["corrupt"][self._checked_ids("corrupt_ids", corrupt_ids)] = True
+        drop = self._checked_ids("dropout_ids", dropout_ids)
+        crash = self._checked_ids("crash_ids", crash_ids)
+        corr = self._checked_ids("corrupt_ids", corrupt_ids)
+        out["dropout"][drop] = True
+        out["crash_after_phase2"][crash] = True
+        out["corrupt"][corr] = True
         sl = self._checked_ids("straggler_ids", straggler_ids)
         out["compute_delay"][sl] = out["compute_delay"][sl] * straggler_slowdown
+        fm = out["fault_model"] or NO_FAULTS
+        out["fault_model"] = dataclasses.replace(
+            fm,
+            dropout_frac=max(fm.dropout_frac, drop.size / self.n),
+            crash_after_phase2_frac=max(
+                fm.crash_after_phase2_frac, crash.size / self.n
+            ),
+            corrupt_frac=max(fm.corrupt_frac, corr.size / self.n),
+        )
         return WorkerTrace(**out)._disjoint()
 
     def _disjoint(self) -> "WorkerTrace":
@@ -570,5 +601,6 @@ def sample_trace(
         crash_after_phase2=rng.random(n) < faults.crash_after_phase2_frac,
         corrupt=rng.random(n) < faults.corrupt_frac,
         link_delay=link,
+        fault_model=faults,
     )
     return trace._disjoint()

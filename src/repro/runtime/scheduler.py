@@ -19,14 +19,33 @@ module decides *which subset actually does*, by replaying a
    decode matrix comes from the plan's subset cache, so recurring
    fastest-subsets cost one Gauss-Jordan total).
 
-Corrupted responses: the master cannot see corruption directly, so when
-``verify_extras > 0`` it withholds acceptance until a decode is
-*confirmed* by that many responders outside the decode subset (the
-interpolated I(x) must reproduce their evaluations).  A corrupt
-response is garbage, so it can neither be confirmed as part of a subset
-nor falsely confirm a clean one; mismatching responders are reported as
-detected-corrupt.  ``verify_extras="auto"`` enables one confirmation
-exactly when the trace can contain corruption.
+Corrupted responses — two strategies, picked by ``decode_mode``:
+
+* ``"detect"`` (confirm-and-retry): when ``verify_extras > 0`` the
+  master withholds acceptance until a decode is *confirmed* by that
+  many responders outside the decode subset (the interpolated I(x)
+  must reproduce their evaluations).  A corrupt response is garbage,
+  so it can neither be confirmed as part of a subset nor falsely
+  confirm a clean one; mismatching responders are reported as
+  detected-corrupt.  Under heavy corruption this degrades into the
+  seeded-random subset hunt of ``_candidate_subsets``.
+* ``"correct"`` (Berlekamp-Welch): the responses are a Reed-Solomon
+  codeword, so with ``error_budget = e`` the master waits for the
+  fastest ``thr + 2e`` responders and runs ONE error-correcting decode
+  (``core.bw_decode``) that recovers I(x) *and* names the corrupt
+  responders (``RunMetrics.corrected_workers``) — no subset search,
+  no retry.  If more than ``e`` responders are corrupt, later arrivals
+  widen the window (budget ``(k - thr) // 2`` at ``k`` responses)
+  until the clean responders run out.
+* ``"auto"``: ``"correct"`` when the resolved error budget is > 0,
+  ``"detect"`` otherwise.
+
+``verify_extras="auto"`` / ``error_budget="auto"`` resolve from the
+trace's *configured* fault model (``WorkerTrace.fault_model`` — what
+the master knows because it provisioned the pool), never from the
+sampled ``trace.corrupt`` flags, which are ground truth the master
+cannot see.  A hand-built corrupt trace with no fault model therefore
+gets NO automatic protection — exactly the honest semantics.
 
 Two replay entry points share ONE event loop (``_replay_events``):
 
@@ -62,10 +81,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import protocol as proto
+from ..core.bw_decode import BWDecodeError, bw_decode_evals, bw_system_size
 from ..core.distributed import run_phase2_sharded
 from ..core.planner import CMPCPlan
 from .metrics import RunMetrics
 from .pool import WorkerTrace
+
+_EMPTY_IDS = np.array([], np.int64)
 
 
 class DecodeFailure(RuntimeError):
@@ -97,12 +119,14 @@ class BatchEdgeRun:
     per_product: List[RunMetrics]
 
 
-# Bound on per-event decode-subset search when hunting for a confirmable
-# subset among corrupt responses; the search resumes at the next arrival.
-# Half the budget goes to the deterministic colex front (fastest-first),
-# half to seeded random subsets that keep heavy corruption from starving
-# the front (see _candidate_subsets).
-_MAX_SUBSET_TRIES = 128
+# Default bound on per-event decode-subset search when hunting for a
+# confirmable subset among corrupt responses; the search resumes at the
+# next arrival.  Half the budget goes to the deterministic colex front
+# (fastest-first), half to seeded random subsets that keep heavy
+# corruption from starving the front (see _candidate_subsets).  Callers
+# override via ``max_subset_tries`` to trade search time for success
+# rate deterministically under heavy corruption.
+DEFAULT_SUBSET_TRIES = 128
 
 
 @dataclasses.dataclass
@@ -114,6 +138,7 @@ class _Replay:
     responder_ids: np.ndarray
     confirmed_by: np.ndarray
     rejected_ids: np.ndarray
+    corrected_ids: np.ndarray  # BW-identified (and corrected) corrupt
     phase1_last: float
     phase2_set_time: float
     first_response: float
@@ -148,6 +173,9 @@ def _replay_events(
     share_arrival: Optional[np.ndarray] = None,
     compute_finish: Optional[np.ndarray] = None,
     compute_scale: float = 1.0,
+    decode_mode: str = "detect",
+    error_budget: int = 0,
+    max_subset_tries: int = DEFAULT_SUBSET_TRIES,
 ) -> _Replay:
     """The shared event loop: timestamps, subsets, and the decode search.
 
@@ -177,6 +205,13 @@ def _replay_events(
     Phase-2 sender set rather than one scalar D2D delay; a dead
     (infinite) incoming link starves the receiver, which then never
     responds in Phase 3.
+
+    ``decode_mode`` must arrive resolved (``"detect"`` or
+    ``"correct"``).  In ``"correct"`` mode ``verify_extras`` is ignored
+    (the BW decode self-verifies against every clean responder in the
+    window) and acceptance waits for ``thr + 2 * error_budget``
+    responses; ``max_subset_tries`` bounds the ``"detect"`` subset
+    search per arrival.
     """
     p = plan.field.p
     share_at = trace.share_delay if share_arrival is None else share_arrival
@@ -205,6 +240,7 @@ def _replay_events(
     arrived: list = []  # (time, worker) in response-arrival order
     first_response = float("nan")
     decode_cache: dict = {}  # subset id-tuple -> coeffs, across arrivals
+    bw_attempts = 0  # correct-mode decode attempts, for the failure census
 
     while events:
         t_now, _, kind, w = heapq.heappop(events)
@@ -259,10 +295,44 @@ def _replay_events(
         if not arrived:
             first_response = t_now
         arrived.append((t_now, w))
+        if decode_mode == "correct":
+            thr = plan.decode_threshold
+            if len(arrived) < bw_system_size(thr, error_budget):
+                continue
+            # Fastest thr + 2e window at budget e; each further arrival
+            # widens both the window and the budget ((k - thr) // 2), so
+            # under-budgeted corruption degrades gracefully instead of
+            # failing outright.
+            e_eff = (len(arrived) - thr) // 2
+            window = np.array(
+                [wk for _, wk in arrived[: bw_system_size(thr, e_eff)]]
+            )
+            bw_attempts += 1
+            try:
+                coeffs, corrected = bw_decode_evals(
+                    plan, i_all, window, e_eff, rng=rng
+                )
+            except BWDecodeError:
+                continue  # > e_eff corrupt in the window: wait for more
+            responders = window[~np.isin(window, corrected)]
+            return _Replay(
+                coeffs=coeffs,
+                phase2_ids=phase2_ids,
+                responder_ids=np.sort(responders),
+                confirmed_by=_EMPTY_IDS.copy(),
+                rejected_ids=_EMPTY_IDS.copy(),
+                corrected_ids=corrected,
+                phase1_last=phase1_last,
+                phase2_set_time=phase2_set_time,
+                first_response=float(first_response),
+                completion=float(t_now + master_decode_cost),
+                n_arrived=len(arrived),
+            )
         if len(arrived) < plan.decode_threshold + verify_extras:
             continue
         accepted = _try_decode(
-            plan, i_all, arrived, verify_extras, vander_check, rng, decode_cache
+            plan, i_all, arrived, verify_extras, vander_check, rng,
+            decode_cache, max_subset_tries,
         )
         if accepted is None:
             continue
@@ -273,6 +343,7 @@ def _replay_events(
             responder_ids=responder_ids,
             confirmed_by=confirmed_by,
             rejected_ids=rejected,
+            corrected_ids=_EMPTY_IDS.copy(),
             phase1_last=phase1_last,
             phase2_set_time=phase2_set_time,
             first_response=float(first_response),
@@ -280,6 +351,18 @@ def _replay_events(
             n_arrived=len(arrived),
         )
 
+    if decode_mode == "correct":
+        raise DecodeFailure(
+            f"events exhausted before a Berlekamp-Welch decode: "
+            f"{len(arrived)} responses arrived, need "
+            f"{plan.decode_threshold} + 2*{error_budget} "
+            f"(threshold {plan.decode_threshold}, error budget "
+            f"{error_budget}, {bw_attempts} BW attempts); "
+            f"dropouts={int(trace.dropout.sum())}, "
+            f"crashed={int((trace.crash_after_phase2 & alive).sum())}, "
+            f"corrupt={int((trace.corrupt & alive).sum())}, "
+            f"link_starved={len(link_starved)}"
+        )
     raise DecodeFailure(
         f"events exhausted before an acceptable decode: {len(arrived)} "
         f"responses arrived, need {plan.decode_threshold} + {verify_extras} "
@@ -329,15 +412,56 @@ def _build_metrics(
         responder_ids=res.responder_ids,
         confirmed_by=res.confirmed_by,
         rejected_ids=res.rejected_ids,
+        corrected_workers=res.corrected_ids,
         trace=_comm_trace(plan, n_recv, res.n_arrived, batch),
         batch=batch,
     )
 
 
 def _resolve_verify_extras(verify_extras, trace: WorkerTrace) -> int:
+    """``"auto"`` -> 1 extra confirmation iff the pool was *provisioned*
+    with a corrupting fault model.
+
+    The master only ever sees what it configured (``trace.fault_model``),
+    never the sampled ``trace.corrupt`` flags — those are ground truth.
+    A hand-built corrupt trace with no fault model resolves to 0 extras
+    and an unverified decode, exactly like a master that provisioned an
+    honest pool.
+    """
     if verify_extras == "auto":
-        return 1 if bool(trace.corrupt.any()) else 0
+        fm = trace.fault_model
+        return 1 if fm is not None and fm.corrupt_frac > 0 else 0
     return int(verify_extras)
+
+
+def _resolve_error_budget(error_budget, trace: WorkerTrace, plan: CMPCPlan) -> int:
+    """``"auto"`` -> expected corrupt count under the *configured* fault
+    model, capped at what the pool can afford ((n_total - thr) // 2);
+    integers pass through (validated >= 0)."""
+    if error_budget == "auto":
+        fm = trace.fault_model
+        if fm is None or fm.corrupt_frac <= 0:
+            return 0
+        cap = (plan.n_total - plan.decode_threshold) // 2
+        want = int(np.ceil(fm.corrupt_frac * trace.n))
+        return max(0, min(want, cap))
+    e = int(error_budget)
+    if e < 0:
+        raise ValueError(f"error_budget must be >= 0, got {e}")
+    return e
+
+
+def _resolve_decode_mode(decode_mode: str, error_budget: int) -> str:
+    """``"auto"`` -> ``"correct"`` iff the resolved error budget buys any
+    protection; explicit modes pass through (validated)."""
+    if decode_mode == "auto":
+        return "correct" if error_budget > 0 else "detect"
+    if decode_mode not in ("detect", "correct"):
+        raise ValueError(
+            f"decode_mode must be 'detect', 'correct', or 'auto', "
+            f"got {decode_mode!r}"
+        )
+    return decode_mode
 
 
 def run_over_pool(
@@ -349,8 +473,19 @@ def run_over_pool(
     verify_extras="auto",
     master_decode_cost: float = 0.0,
     compute_scale: float = 1.0,
+    decode_mode: str = "detect",
+    error_budget="auto",
+    max_subset_tries: int = DEFAULT_SUBSET_TRIES,
 ) -> EdgeRun:
     """Execute Y = A^T B over the simulated pool described by ``trace``.
+
+    ``decode_mode`` selects corruption handling (module docstring):
+    ``"detect"`` confirm-and-retry (the default; ``verify_extras``
+    confirmations, subset search bounded by ``max_subset_tries``),
+    ``"correct"`` one Berlekamp-Welch decode over the fastest
+    ``thr + 2 * error_budget`` responders, ``"auto"`` correct iff the
+    resolved error budget is positive.  ``error_budget="auto"`` resolves
+    from the trace's configured fault model.
 
     Returns the decoded product and the run's :class:`RunMetrics`.
     Raises :class:`DecodeFailure` when the surviving pool cannot serve
@@ -359,6 +494,8 @@ def run_over_pool(
     """
     alive = _check_pool(plan, trace)
     verify_extras = _resolve_verify_extras(verify_extras, trace)
+    error_budget = _resolve_error_budget(error_budget, trace, plan)
+    decode_mode = _resolve_decode_mode(decode_mode, error_budget)
     rng = np.random.default_rng(seed)
 
     # Data plane, Phase 1: sources evaluate and ship shares.
@@ -372,6 +509,8 @@ def run_over_pool(
     res = _replay_events(
         plan, trace, alive, compute_i_all, verify_extras, rng,
         master_decode_cost, compute_scale=compute_scale,
+        decode_mode=decode_mode, error_budget=error_budget,
+        max_subset_tries=max_subset_tries,
     )
     y = proto.assemble_y(plan, res.coeffs)
     return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
@@ -447,6 +586,9 @@ def run_batch_over_pool(
     mode: str = "all_to_all",
     backend: str = "auto",
     compute_scale: float = 1.0,
+    decode_mode: str = "detect",
+    error_budget="auto",
+    max_subset_tries: int = DEFAULT_SUBSET_TRIES,
 ) -> BatchEdgeRun:
     """Replay a whole batch of products through ONE worker trace.
 
@@ -465,11 +607,19 @@ def run_batch_over_pool(
     distributed data plane composed end to end.  Without it, Phase 2 is
     the dense single-host simulation (``degree_reduce``).
 
+    ``decode_mode`` / ``error_budget`` / ``max_subset_tries`` select the
+    corruption-handling strategy exactly as in ``run_over_pool``; a
+    Berlekamp-Welch decode (``"correct"``) corrects each corrupt
+    worker's whole folded payload at once, so the whole batch rides one
+    error-correcting decode.
+
     Returns :class:`BatchEdgeRun`; raises :class:`DecodeFailure` exactly
     like ``run_over_pool``.
     """
     alive = _check_pool(plan, trace)
     verify_extras = _resolve_verify_extras(verify_extras, trace)
+    error_budget = _resolve_error_budget(error_budget, trace, plan)
+    decode_mode = _resolve_decode_mode(decode_mode, error_budget)
     rng = np.random.default_rng(seed)
 
     a_j, b_j = proto._prep_batched_operands(plan, a, b)
@@ -484,6 +634,8 @@ def run_batch_over_pool(
     res = _replay_events(
         plan, trace, alive, compute_i_all, verify_extras, rng,
         master_decode_cost, compute_scale=compute_scale,
+        decode_mode=decode_mode, error_budget=error_budget,
+        max_subset_tries=max_subset_tries,
     )
     y = _unfold_batched_y(plan, res.coeffs, batch)
 
@@ -498,7 +650,10 @@ def run_batch_over_pool(
     return BatchEdgeRun(y=y, metrics=aggregate, per_product=per_product)
 
 
-def _candidate_subsets(k: int, thr: int, rng: np.random.Generator):
+def _candidate_subsets(
+    k: int, thr: int, rng: np.random.Generator,
+    max_tries: int = DEFAULT_SUBSET_TRIES,
+):
     """Arrival-position subsets, fastest-first, with a randomized tail.
 
     The deterministic front is *colex* order — every subset of the
@@ -518,12 +673,12 @@ def _candidate_subsets(k: int, thr: int, rng: np.random.Generator):
         for head in itertools.combinations(range(m - 1), thr - 1):
             yield head + (m - 1,)
             n += 1
-            if n >= _MAX_SUBSET_TRIES // 2:
+            if n >= max_tries // 2:
                 break
         else:
             continue
         break
-    while n < _MAX_SUBSET_TRIES:
+    while n < max_tries:
         yield tuple(np.sort(rng.choice(k, size=thr, replace=False)))
         n += 1
 
@@ -536,6 +691,7 @@ def _try_decode(
     vander_check: np.ndarray,
     rng: np.random.Generator,
     decode_cache: dict,
+    max_subset_tries: int = DEFAULT_SUBSET_TRIES,
 ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
     """Search arrival-ordered responder subsets for an acceptable decode.
 
@@ -553,7 +709,9 @@ def _try_decode(
     ids_by_arrival = [w for _, w in arrived]
     flat = i_all.reshape(i_all.shape[0], -1)
     seen = set()
-    for subset_pos in _candidate_subsets(len(ids_by_arrival), thr, rng):
+    for subset_pos in _candidate_subsets(
+        len(ids_by_arrival), thr, rng, max_subset_tries
+    ):
         if subset_pos in seen:
             continue
         seen.add(subset_pos)

@@ -21,6 +21,7 @@ from repro.runtime import (
     AutoPlanner,
     Deterministic,
     ElasticPool,
+    FaultSpec,
     ShiftedExponential,
     TimeVaryingLinks,
     UniformLinks,
@@ -496,3 +497,71 @@ def test_replay_seed_deterministic_and_decorrelated():
     assert _replay_seed(17, 3) == _replay_seed(17, 3)
     assert _replay_seed(17, 3) != _replay_seed(17, 4)
     assert _replay_seed(18, 3) != _replay_seed(17, 3)
+
+
+# ----------------------------------------------------------------------
+# corruption tuning: the planner prices detect vs correct
+# ----------------------------------------------------------------------
+def _corruption_obs(n_rejected=0, n_corrected=0):
+    return ObservedRun(
+        n_pool=20, n_workers=17, n_ready_pool=20, thr_arrived=8,
+        n_receivers=20, set_time=2.0, response_delta=1.0, completion=3.0,
+        n_dropped=0, n_rejected=n_rejected, n_corrected=n_corrected,
+    )
+
+
+def test_planner_corruption_tuning_prices_decode_modes():
+    planner = AutoPlanner(CANDS, decode_mode="auto")
+    # clean history: no witnesses demanded, no error budget provisioned
+    planner._runs.append(_corruption_obs())
+    assert planner.verify_extras_for() == 0
+    assert planner.error_budget(CANDS[0], 20) == 0
+    # corrections observed: one witness, budget follows the fitted rate
+    planner._runs.append(_corruption_obs(n_corrected=4))
+    est = planner.estimate()
+    assert est.corrupt_rate == pytest.approx(4 / 40)
+    assert planner.verify_extras_for(est) == 1
+    e = planner.error_budget(CANDS[0], 20, est)
+    thr = CANDS[0].decode_threshold
+    assert 1 <= e <= (20 - thr) // 2
+    # decode-wait pricing mirrors the runtime's resolution rules
+    for mode, want in (
+        ("detect", thr + 1),
+        ("correct", thr + 2 * e),
+        ("auto", min(thr + 1, thr + 2 * e)),
+    ):
+        p = AutoPlanner(CANDS, decode_mode=mode)
+        p._runs.extend(planner._runs)
+        assert p._threshold(CANDS[0], p.estimate(), 20) == want
+    assert planner.summary()["decode_mode"] == "auto"
+    with pytest.raises(ValueError, match="decode_mode"):
+        AutoPlanner(CANDS, decode_mode="majority")
+
+
+def test_adaptive_correct_mode_end_to_end():
+    """The adaptive loop rides the BW decode: corrupt traces, every
+    replay oracle-validated, corrections fed back into the estimate."""
+    m = 8
+    K = 3
+    traces = [
+        sample_trace(
+            20,
+            ShiftedExponential(1.0, 0.5),
+            faults=FaultSpec(corrupt_frac=0.1),
+            seed=300 + k,
+        )
+        for k in range(K)
+    ]
+    rng = np.random.default_rng(7)
+    a = FIELD.random(rng, (K, m, m))
+    b = FIELD.random(rng, (K, m, m))
+    planner = AutoPlanner(CANDS, window=4, decode_mode="correct")
+    run = run_adaptive_over_pool(
+        planner, a, b, traces, seed=9, decode_mode="correct"
+    )
+    for k in range(K):
+        assert np.array_equal(run.y[k, 0], FIELD.matmul(a[k].T, b[k]))
+    assert planner.summary()["decode_mode"] == "correct"
+    n_corrupt = sum(int(t.corrupt.sum()) for t in traces)
+    corrected = sum(r.n_corrected for r in planner._runs)
+    assert corrected >= 0 and (n_corrupt == 0 or corrected <= n_corrupt * K)

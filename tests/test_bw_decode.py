@@ -1,0 +1,217 @@
+"""Berlekamp-Welch error-correcting decode: core algebra and plan glue.
+
+Every case is validated against ground truth: a random polynomial is
+evaluated at distinct points, a chosen subset of evaluations is
+overwritten with garbage, and BW must recover both the polynomial and
+the exact corrupted positions."""
+import numpy as np
+import pytest
+
+from repro.core import constructions as C
+from repro.core import protocol as proto
+from repro.core.bw_decode import (
+    BWDecodeError,
+    bw_decode_evals,
+    bw_interpolate,
+    bw_system_size,
+)
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, make_plan
+
+FIELD = Field()
+
+
+def _poly_points(rng, thr, k, payload=1):
+    """Random degree-<thr polynomial + k distinct evaluation points."""
+    coeffs = FIELD.random(rng, (thr, payload))
+    xs = rng.choice(FIELD.p - 1, size=k, replace=False) + 1
+    v = FIELD.vandermonde(xs, range(thr))
+    return coeffs, xs, FIELD.matmul(v, coeffs)
+
+
+def _corrupt(rng, ys, rows):
+    out = ys.copy()
+    for r in rows:
+        while True:
+            g = FIELD.random(rng, out[r].shape)
+            if not np.array_equal(g, ys[r]):
+                break
+        out[r] = g
+    return out
+
+
+# ----------------------------------------------------------------------
+# field helpers the decoder is built on
+# ----------------------------------------------------------------------
+def test_solve_any_rank_deficient():
+    """Singular-but-consistent systems yield a valid particular solution
+    (free variables pinned to 0); inconsistent ones raise."""
+    rng = np.random.default_rng(0)
+    a = FIELD.random(rng, (4, 3))
+    a = np.concatenate([a, a[:1]], axis=0)  # duplicate row: rank <= 3
+    x_true = FIELD.random(rng, (3,))
+    b = FIELD.matmul(a, x_true[:, None])[:, 0]
+    x = FIELD.solve_any(a, b)
+    assert np.array_equal(FIELD.matmul(a, x[:, None])[:, 0], b)
+    bad = b.copy()
+    bad[-1] = (bad[-1] + 1) % FIELD.p
+    with pytest.raises(ValueError, match="inconsistent"):
+        FIELD.solve_any(a, bad)
+
+
+def test_poly_divmod_and_eval():
+    rng = np.random.default_rng(1)
+    den = np.concatenate([FIELD.random(rng, (2,)), np.ones(1, np.int64)])
+    quo_true = FIELD.random(rng, (4,))
+    num = np.zeros(den.size + quo_true.size - 1, np.int64)
+    for i, d in enumerate(den):
+        num[i : i + quo_true.size] = (num[i : i + quo_true.size]
+                                      + d * quo_true) % FIELD.p
+    quo, rem = FIELD.poly_divmod(num, den)
+    assert np.array_equal(quo, quo_true)
+    assert not rem.size or not np.any(rem)
+    xs = np.arange(1, 8)
+    v = FIELD.vandermonde(xs, range(num.size))
+    assert np.array_equal(
+        FIELD.poly_eval(num, xs), FIELD.matmul(v, num[:, None])[:, 0]
+    )
+
+
+# ----------------------------------------------------------------------
+# bw_interpolate: the standalone error-correcting interpolation
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("e", [0, 1, 2, 3])
+def test_recovers_with_e_errors(e):
+    rng = np.random.default_rng(10 + e)
+    thr = 6
+    k = bw_system_size(thr, e)
+    coeffs, xs, ys = _poly_points(rng, thr, k)
+    bad = rng.choice(k, size=e, replace=False)
+    got, err = bw_interpolate(
+        FIELD, xs, _corrupt(rng, ys, bad)[:, 0], thr, e, rng=rng
+    )
+    assert np.array_equal(got, coeffs[:, 0])
+    assert np.array_equal(np.sort(err), np.sort(bad))
+
+
+@pytest.mark.parametrize("payload", [1, 5])
+def test_vector_payload_shares_error_pattern(payload):
+    """A corrupt row corrupts its whole payload; one locator pass on the
+    random combination must find it and the full payload decode."""
+    rng = np.random.default_rng(2)
+    thr, e = 5, 2
+    k = bw_system_size(thr, e) + 2  # slack rows beyond the minimum
+    coeffs, xs, ys = _poly_points(rng, thr, k, payload)
+    bad = [0, 4]
+    got, err = bw_interpolate(FIELD, xs, _corrupt(rng, ys, bad), thr, e, rng=rng)
+    assert np.array_equal(got, coeffs)  # [thr, payload] in, same shape out
+    assert np.array_equal(err, np.array(bad))
+
+
+def test_fewer_errors_than_budget():
+    """Actual errors < e leaves the system singular; the decode must
+    still succeed and must not flag clean rows."""
+    rng = np.random.default_rng(3)
+    thr, e = 6, 3
+    coeffs, xs, ys = _poly_points(rng, thr, bw_system_size(thr, e))
+    got, err = bw_interpolate(
+        FIELD, xs, _corrupt(rng, ys, [2])[:, 0], thr, e, rng=rng
+    )
+    assert np.array_equal(got, coeffs[:, 0])
+    assert err.tolist() == [2]
+    got, err = bw_interpolate(FIELD, xs, ys[:, 0], thr, e, rng=rng)  # 0 errors
+    assert np.array_equal(got, coeffs[:, 0])
+    assert err.size == 0
+
+
+def test_over_budget_raises():
+    rng = np.random.default_rng(4)
+    thr, e = 6, 2
+    _, xs, ys = _poly_points(rng, thr, bw_system_size(thr, e))
+    ys_bad = _corrupt(rng, ys, [0, 1, 2])  # e + 1 errors
+    with pytest.raises(BWDecodeError):
+        bw_interpolate(FIELD, xs, ys_bad, thr, e, rng=rng)
+
+
+def test_input_validation():
+    rng = np.random.default_rng(5)
+    _, xs, ys = _poly_points(rng, 4, 8)
+    with pytest.raises(ValueError, match="thr \\+ 2e"):
+        bw_interpolate(FIELD, xs, ys, 4, 3, rng=rng)  # k < thr + 2e
+    xs_dup = xs.copy()
+    xs_dup[1] = xs_dup[0]
+    with pytest.raises(ValueError, match="distinct"):
+        bw_interpolate(FIELD, xs_dup, ys, 4, 2, rng=rng)
+    with pytest.raises(ValueError, match=">= 0"):
+        bw_interpolate(FIELD, xs, ys, 4, -1, rng=rng)
+
+
+# ----------------------------------------------------------------------
+# bw_decode_evals: plan-aware decode of Phase-3 responses
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def plan_setup():
+    field = Field()
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, n_spare=6, seed=1)
+    rng = np.random.default_rng(0)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    return plan, a, b, field.matmul(a.T, b)
+
+
+def _phase3_rows(plan, a, b, seed=0):
+    rng = np.random.default_rng(seed)
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    h = proto.worker_multiply(plan, fa, fb)
+    i_all = np.array(proto.degree_reduce(plan, h, rng))
+    return i_all.reshape(plan.n_total, -1), rng
+
+
+@pytest.mark.parametrize("e", [0, 1, 2, 3])
+def test_plan_decode_corrects_and_names(plan_setup, e):
+    plan, a, b, want = plan_setup
+    flat, rng = _phase3_rows(plan, a, b, seed=20 + e)
+    ids = np.arange(bw_system_size(plan.decode_threshold, e))
+    bad = ids[:e]
+    for w in bad:
+        flat[w] = FIELD.random(rng, flat[w].shape)
+    coeffs, corrected = bw_decode_evals(plan, flat, ids, e, rng=rng)
+    assert np.array_equal(proto.assemble_y(plan, coeffs), want)
+    assert np.array_equal(corrected, np.sort(bad))
+
+
+def test_plan_decode_over_budget(plan_setup):
+    plan, a, b, _ = plan_setup
+    flat, rng = _phase3_rows(plan, a, b, seed=30)
+    e = 1
+    ids = np.arange(bw_system_size(plan.decode_threshold, e))
+    for w in ids[:2]:  # e + 1 corrupt
+        flat[w] = FIELD.random(rng, flat[w].shape)
+    with pytest.raises(BWDecodeError):
+        bw_decode_evals(plan, flat, ids, e, rng=rng)
+
+
+def test_bw_matrices_cached(plan_setup):
+    plan, _, _, _ = plan_setup
+    ids = np.arange(bw_system_size(plan.decode_threshold, 2))
+    m1 = plan.bw_decode_matrices(ids, 2)
+    m2 = plan.bw_decode_matrices(ids, 2)
+    assert m1 is m2  # same subset + budget -> cache hit
+    m3 = plan.bw_decode_matrices(ids, 1)
+    assert m3.shape[1] == plan.decode_threshold + 1  # budget keys differ
+    assert m1.shape == (ids.size, plan.decode_threshold + 2)
+    with pytest.raises(ValueError, match=">= 0"):
+        plan.bw_decode_matrices(ids, -1)
+
+
+def test_reconstruct_corrected_matches_reconstruct(plan_setup):
+    """protocol.reconstruct_corrected on a clean pool == reconstruct."""
+    plan, a, b, want = plan_setup
+    flat, rng = _phase3_rows(plan, a, b, seed=40)
+    ids = np.arange(bw_system_size(plan.decode_threshold, 2))
+    y, corrected = proto.reconstruct_corrected(plan, flat, ids, 2, rng=rng)
+    assert np.array_equal(y, want)
+    assert corrected.size == 0

@@ -1,0 +1,248 @@
+"""Byzantine-tolerant runtime decode: correct vs detect over one pool.
+
+The acceptance bar: ``decode_mode="correct"`` recovers the
+oracle-validated product from ``thr + 2e`` responses with ``e``
+injected corruptions for ``e`` up to ``n_spare // 2``, on byte-identical
+traces where ``"detect"`` raises :class:`DecodeFailure` or needs
+strictly more responders.  Plus the two satellite regressions: the
+``verify_extras="auto"`` oracle-knowledge fix and the
+``max_subset_tries`` knob."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import constructions as C
+from repro.core.bw_decode import bw_system_size
+from repro.core.gf import Field
+from repro.core.planner import BlockShapes, make_plan
+from repro.runtime import (
+    DecodeFailure,
+    Deterministic,
+    FaultSpec,
+    run_batch_over_pool,
+    run_over_pool,
+    sample_trace,
+)
+from repro.runtime.metrics import observed_run
+from repro.runtime.scheduler import (
+    DEFAULT_SUBSET_TRIES,
+    _resolve_decode_mode,
+    _resolve_error_budget,
+    _resolve_verify_extras,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    field = Field()
+    sch = C.build_scheme("age", 2, 2, 2)
+    shapes = BlockShapes(k=8, ma=8, mb=4, s=2, t=2)
+    plan = make_plan(sch, shapes, n_spare=6, seed=1)
+    rng = np.random.default_rng(0)
+    a = field.random(rng, (8, 8))
+    b = field.random(rng, (8, 4))
+    return plan, a, b, field.matmul(a.T, b)
+
+
+def _staircase_trace(plan, corrupt_ids=(), crash_tail=0, seed=2):
+    """Deterministic trace with strictly increasing uplink delays, so
+    Phase-3 responses arrive exactly in worker-id order; optionally the
+    ``crash_tail`` highest ids crash after Phase 2 (shrinking the
+    responder pool to a known prefix)."""
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=seed)
+    trace = dataclasses.replace(trace, uplink_delay=0.1 + 0.01 * np.arange(plan.n_total))
+    kwargs = {"corrupt_ids": list(corrupt_ids)}
+    if crash_tail:
+        kwargs["crash_ids"] = list(range(plan.n_total - crash_tail, plan.n_total))
+    return trace.with_faults(**kwargs)
+
+
+# ----------------------------------------------------------------------
+# tentpole acceptance: correct from thr + 2e where detect cannot
+# ----------------------------------------------------------------------
+def test_correct_recovers_up_to_half_spares(setup):
+    """e = 1 .. n_spare // 2 corruptions among the fastest responders:
+    BW decodes from exactly thr + 2e responses, names the corrupt, and
+    the same byte-identical trace starves detect (verify_extras = e + 1,
+    the witness margin that tolerates e corrupt witnesses) of
+    confirmable responses entirely."""
+    plan, a, b, want = setup
+    thr = plan.decode_threshold
+    for e in range(1, plan.n_spare // 2 + 1):
+        need = bw_system_size(thr, e)
+        # crash everyone beyond the thr + 2e fastest: the responder pool
+        # is exactly the BW window
+        trace = _staircase_trace(
+            plan,
+            corrupt_ids=range(e),
+            crash_tail=plan.n_total - need,
+            seed=10 + e,
+        )
+        run = run_over_pool(
+            plan, a, b, trace, seed=3, decode_mode="correct", error_budget=e
+        )
+        assert np.array_equal(run.y, want)
+        assert np.array_equal(
+            run.metrics.corrected_workers, np.arange(e)
+        )
+        assert observed_run(run.metrics).thr_arrived == need
+        # byte-identical trace, detect: thr + e clean responders exist
+        # but thr + (e + 1) are demanded -> no acceptable decode
+        with pytest.raises(DecodeFailure):
+            run_over_pool(
+                plan, a, b, trace, seed=3,
+                decode_mode="detect", verify_extras=e + 1,
+            )
+
+
+def test_correct_widens_past_budget(setup):
+    """More corrupt responders than the budget: each extra arrival
+    widens the window ((k - thr) // 2) until the decode lands."""
+    plan, a, b, want = setup
+    trace = _staircase_trace(plan, corrupt_ids=[0, 1, 2], seed=5)
+    run = run_over_pool(
+        plan, a, b, trace, seed=3, decode_mode="correct", error_budget=1
+    )
+    assert np.array_equal(run.y, want)
+    assert np.array_equal(run.metrics.corrected_workers, np.array([0, 1, 2]))
+
+
+def test_correct_exhaustion_census(setup):
+    """Too many corrupt for the pool: the failure names the BW budget
+    and attempt count, not the detect-mode confirmation census."""
+    plan, a, b, _ = setup
+    thr = plan.decode_threshold
+    n_corrupt = plan.n_total - thr + 1  # < thr clean responders remain
+    trace = _staircase_trace(plan, corrupt_ids=range(n_corrupt), seed=6)
+    with pytest.raises(DecodeFailure, match="Berlekamp-Welch.*BW attempts"):
+        run_over_pool(
+            plan, a, b, trace, seed=3, decode_mode="correct", error_budget=2
+        )
+
+
+def test_auto_mode_resolves_from_fault_model(setup):
+    """decode_mode="auto" turns correction on exactly when the
+    configured fault model prices a positive error budget."""
+    plan, a, b, want = setup
+    corrupt = _staircase_trace(plan, corrupt_ids=[0, 1], seed=7)
+    run = run_over_pool(plan, a, b, corrupt, seed=3, decode_mode="auto")
+    assert np.array_equal(run.y, want)
+    assert run.metrics.corrected_workers.size == 2
+    clean = _staircase_trace(plan, seed=8)
+    run2 = run_over_pool(plan, a, b, clean, seed=3, decode_mode="auto")
+    assert np.array_equal(run2.y, want)
+    assert run2.metrics.corrected_workers.size == 0
+    assert run2.metrics.responder_ids.size == plan.decode_threshold
+
+
+def test_batched_correct_mode(setup):
+    """The whole batch rides one BW decode; per-product results match
+    the oracle and the aggregate names the corrupt workers."""
+    plan, _, _, _ = setup
+    field = plan.field
+    rng = np.random.default_rng(9)
+    a = field.random(rng, (3, 8, 8))
+    b = field.random(rng, (3, 8, 4))
+    want = np.stack([field.matmul(x.T, y) for x, y in zip(a, b)])
+    trace = _staircase_trace(plan, corrupt_ids=[1, 3], seed=10)
+    run = run_batch_over_pool(
+        plan, a, b, trace, seed=3, decode_mode="correct", error_budget=2
+    )
+    assert np.array_equal(run.y, want)
+    assert np.array_equal(run.metrics.corrected_workers, np.array([1, 3]))
+    assert all(
+        np.array_equal(m.corrected_workers, np.array([1, 3]))
+        for m in run.per_product
+    )
+
+
+# ----------------------------------------------------------------------
+# satellite: verify_extras="auto" must not peek at sampled ground truth
+# ----------------------------------------------------------------------
+def test_auto_extras_resolves_from_configuration_not_oracle(setup):
+    plan, _, _, _ = setup
+    # hand-built corrupt flags, no fault model: the master knows nothing
+    bare = sample_trace(plan.n_total, Deterministic(1.0), seed=11)
+    bare = dataclasses.replace(bare, corrupt=np.isin(np.arange(plan.n_total), [2]),
+                        fault_model=None)
+    assert _resolve_verify_extras("auto", bare) == 0
+    # configured model with corruption, zero sampled corrupt: protected
+    spec = FaultSpec(corrupt_frac=0.2)
+    configured = sample_trace(
+        plan.n_total, Deterministic(1.0), faults=spec, seed=12
+    )
+    configured = dataclasses.replace(configured, 
+        corrupt=np.zeros(plan.n_total, bool), fault_model=spec
+    )
+    assert _resolve_verify_extras("auto", configured) == 1
+    assert _resolve_error_budget("auto", configured, plan) >= 1
+    assert _resolve_error_budget("auto", bare, plan) == 0
+    assert _resolve_decode_mode("auto", 0) == "detect"
+    assert _resolve_decode_mode("auto", 2) == "correct"
+    with pytest.raises(ValueError, match="decode_mode"):
+        _resolve_decode_mode("majority", 0)
+
+
+def test_unprotected_corrupt_trace_is_wrong_or_fails(setup):
+    """Regression for the oracle-knowledge bug: a corrupt trace with
+    verify_extras=0 (or a hand-built trace resolving to 0) must produce
+    a wrong-or-failed decode — protection cannot come from flags the
+    master is not supposed to see."""
+    plan, a, b, want = setup
+    trace = _staircase_trace(plan, corrupt_ids=[0], seed=13)
+    trace = dataclasses.replace(trace, fault_model=None)  # hand-built: no configuration
+    try:
+        run = run_over_pool(plan, a, b, trace, seed=3, verify_extras="auto")
+        assert not np.array_equal(run.y, want)
+    except DecodeFailure:
+        pass
+
+
+def test_with_faults_updates_fault_model(setup):
+    """Explicit placement is a configuration act: the resulting trace
+    advertises at least the placed fraction per fault class."""
+    plan, _, _, _ = setup
+    trace = sample_trace(plan.n_total, Deterministic(1.0), seed=14)
+    assert trace.fault_model is not None
+    assert trace.fault_model.corrupt_frac == 0.0
+    faulted = trace.with_faults(corrupt_ids=[0, 1], crash_ids=[5])
+    assert faulted.fault_model.corrupt_frac == pytest.approx(2 / plan.n_total)
+    assert faulted.fault_model.crash_after_phase2_frac == pytest.approx(
+        1 / plan.n_total
+    )
+    # selection keeps the pool-level configuration
+    assert faulted.take(plan.n_total - 1).fault_model == faulted.fault_model
+
+
+# ----------------------------------------------------------------------
+# satellite: max_subset_tries is a real knob
+# ----------------------------------------------------------------------
+def test_max_subset_tries_bounds_detect_search(setup):
+    """A tiny search budget starves detect on a corrupt-heavy prefix
+    (or forces strictly more responders); the default budget succeeds
+    on the byte-identical trace."""
+    plan, a, b, want = setup
+    thr = plan.decode_threshold
+    trace = _staircase_trace(plan, corrupt_ids=range(4), seed=15)
+    ok = run_over_pool(
+        plan, a, b, trace, seed=3, verify_extras=1,
+        max_subset_tries=DEFAULT_SUBSET_TRIES,
+    )
+    assert np.array_equal(ok.y, want)
+    arrived_ok = observed_run(ok.metrics).thr_arrived
+    try:
+        starved = run_over_pool(
+            plan, a, b, trace, seed=3, verify_extras=1, max_subset_tries=2
+        )
+        # with only 2 colex candidates per arrival the clean subset is
+        # found later (if at all): strictly more responders consumed
+        assert observed_run(starved.metrics).thr_arrived > arrived_ok
+        assert np.array_equal(starved.y, want)
+    except DecodeFailure:
+        pass
+    with pytest.raises(DecodeFailure):
+        # zero budget: no candidate subsets at all
+        run_over_pool(
+            plan, a, b, trace, seed=3, verify_extras=1, max_subset_tries=0
+        )

@@ -4,14 +4,27 @@ Information-theoretic privacy against z colluders reduces to: the z
 secret coefficients act as a one-time pad on any z workers' shares,
 i.e. the z x z Vandermonde submatrix on the secret powers is invertible
 mod p.  We verify that algebraic condition for many worker subsets, and
-run a distribution smoke test (share histograms are uniform)."""
+run a distribution smoke test (share histograms are uniform).
+
+The property tests at the bottom extend the subset sweep to the
+*adversarial* setting: the colluding set may consist entirely of
+corrupt-flagged workers — including the ones a Berlekamp-Welch decode
+identifies and corrects — and their joint view stays independent of
+the secrets.  Misbehaving in Phase 3 reveals nothing extra: a worker's
+view is fixed by the shares it *receives*, not by what it sends back."""
 import itertools
 
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic example grid
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.core import constructions as C
 from repro.core import protocol as proto
+from repro.core.bw_decode import bw_decode_evals, bw_system_size
 from repro.core.gf import Field
 from repro.core.planner import BlockShapes, make_plan
 
@@ -51,6 +64,98 @@ def test_share_uniformity_smoke():
     # both near-uniform and near each other
     assert np.abs(hists[0] - 1 / buckets).max() < 0.01
     assert np.abs(hists[0] - hists[1]).max() < 0.01
+
+
+# ----------------------------------------------------------------------
+# adversarial collusion properties (Byzantine workers learn nothing)
+# ----------------------------------------------------------------------
+_FIELD = Field()
+
+
+def _adversarial_plan(method, s, t, z, seed):
+    sch = C.build_scheme(method, s, t, z)
+    shapes = BlockShapes(k=s * 2, ma=t * 2, mb=t * 2, s=s, t=t)
+    return sch, make_plan(sch, shapes, n_spare=4, seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    method_stz=st.sampled_from(
+        [("age", 2, 2, 2), ("polydot", 2, 2, 3), ("age", 3, 2, 4)]
+    ),
+    e=st.integers(1, 2),
+    seed=st.integers(0, 10_000),
+)
+def test_bw_identified_workers_views_stay_padded(method_stz, e, seed):
+    """Run the protocol with e corrupt workers, let Berlekamp-Welch name
+    them, then check the privacy condition for a colluding set built
+    AROUND the identified workers: the z x z secret-power Vandermonde of
+    any subset containing them stays invertible, so their joint view is
+    one-time-padded regardless of having been caught misbehaving."""
+    method, s, t, z = method_stz
+    sch, plan = _adversarial_plan(method, s, t, z, seed % 7)
+    rng = np.random.default_rng(seed)
+    a = _FIELD.random(rng, (plan.shapes.k, plan.shapes.ma))
+    b = _FIELD.random(rng, (plan.shapes.k, plan.shapes.mb))
+    fa = proto.share_a(plan, a, rng)
+    fb = proto.share_b(plan, b, rng)
+    i_all = np.array(proto.degree_reduce(
+        plan, proto.worker_multiply(plan, fa, fb), rng
+    )).reshape(plan.n_total, -1)
+    ids = rng.permutation(plan.n_total)[: bw_system_size(plan.decode_threshold, e)]
+    bad = ids[:e]
+    for w in bad:
+        i_all[w] = _FIELD.random(rng, i_all[w].shape)
+    coeffs, corrected = bw_decode_evals(plan, i_all, ids, e, rng=rng)
+    assert np.array_equal(
+        proto.assemble_y(plan, coeffs), _FIELD.matmul(a.T, b)
+    )
+    assert np.array_equal(corrected, np.sort(bad))
+    # colluders: every identified-corrupt worker, padded to z with other
+    # (corrupt-flagged or honest) workers
+    rest = np.setdiff1d(np.arange(plan.n_total), corrected)
+    colluders = np.concatenate(
+        [corrected, rng.permutation(rest)]
+    )[:z].astype(np.int64)
+    for powers in (sch.sa, sch.sb):
+        v = _FIELD.vandermonde(plan.alphas[colluders], powers)
+        _FIELD.inv_matrix(v)  # raises if singular -> privacy broken
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    method_stz=st.sampled_from([("age", 2, 2, 2), ("polydot", 2, 2, 3)]),
+    seed=st.integers(0, 10_000),
+)
+def test_equalizing_noise_exists_for_any_colluding_view(method_stz, seed):
+    """The one-time-pad property, executed: for ANY two inputs a0 != a1
+    and any z colluding workers (corrupt-flagged ones included), there
+    is a noise draw under which the colluders' shares of a1 are
+    byte-identical to their shares of a0 — so the view determines
+    nothing about the input.  Built from linearity: sharing a0 and a1
+    under the SAME noise leaves a noise-free difference, and the secret
+    Vandermonde maps a noise delta onto exactly that difference."""
+    method, s, t, z = method_stz
+    sch, plan = _adversarial_plan(method, s, t, z, seed % 5)
+    rng = np.random.default_rng(seed)
+    a0 = _FIELD.random(rng, (plan.shapes.k, plan.shapes.ma))
+    a1 = _FIELD.random(rng, (plan.shapes.k, plan.shapes.ma))
+    if np.array_equal(a0, a1):  # astronomically unlikely; keep the claim honest
+        a1 = (a1 + 1) % _FIELD.p
+    share_seed = int(rng.integers(2**31 - 1))
+    f0 = np.asarray(proto.share_a(plan, a0, np.random.default_rng(share_seed)))
+    f1 = np.asarray(proto.share_a(plan, a1, np.random.default_rng(share_seed)))
+    colluders = rng.permutation(plan.n_total)[:z].astype(np.int64)
+    # identical noise cancels: the colluders' view difference is purely
+    # data-driven, and the z x z secret Vandermonde absorbs it
+    diff = (f0[colluders] - f1[colluders]) % _FIELD.p
+    v = _FIELD.vandermonde(plan.alphas[colluders], sch.sa)
+    delta = _FIELD.solve(v, diff.reshape(z, -1))  # the equalizing noise delta
+    patched = (f1[colluders].reshape(z, -1) + _FIELD.matmul(v, delta)) % _FIELD.p
+    assert np.array_equal(patched, f0[colluders].reshape(z, -1))
+    # the pad is real: the inputs differ, and so did the raw views
+    assert not np.array_equal(a0, a1)
+    assert not np.array_equal(f0[colluders], f1[colluders])
 
 
 def test_no_secret_leak_without_noise():

@@ -32,6 +32,21 @@ import sys
 
 DEFAULT_FILES = ("BENCH_protocol.json", "BENCH_edge.json")
 
+# Required top-level sections per benchmark file.  A regenerated JSON
+# missing one of these means a report section silently fell out of the
+# harness (the leaf diff only catches that when a baseline exists).
+KNOWN_SCHEMA = {
+    "BENCH_protocol.json": (
+        "bench", "config", "batches", "phases_us", "padding_waste",
+        "sharded_batched",
+    ),
+    "BENCH_edge.json": (
+        "bench", "config", "scenarios", "per_link", "pipelined",
+        "adaptive", "byzantine", "batched_replay", "sharded_batched",
+        "subset_cache",
+    ),
+}
+
 # Leaf-key fragments measured in host microseconds (machine-dependent).
 WALLCLOCK_MARKERS = ("_us", "us_per")
 # Dimensionless ratios of wall-clock measurements.
@@ -83,15 +98,21 @@ def diff_file(root: str, name: str, ref: str, band: float) -> list:
     path = os.path.join(root, name)
     if not os.path.exists(path):
         return [f"{name}: fresh file missing (run the benchmark first)"]
-    base = committed_json(root, name, ref)
-    if base is None:
-        print(f"{name}: no baseline at {ref}, skipping")
-        return []
     with open(path) as f:
         fresh = json.load(f)
+    # Known-schema check runs even without a baseline: the commit that
+    # introduces a section still proves the harness emits it.
+    problems = [
+        f"{name}: schema: missing top-level section {k!r}"
+        for k in KNOWN_SCHEMA.get(name, ())
+        if k not in fresh
+    ]
+    base = committed_json(root, name, ref)
+    if base is None:
+        print(f"{name}: no baseline at {ref}, schema check only")
+        return problems
     fb, ff = flatten(base), flatten(fresh)
 
-    problems = []
     for p in sorted(set(fb) - set(ff)):
         problems.append(f"{name}: leaf removed: {p}")
     for p in sorted(set(ff) - set(fb)):
