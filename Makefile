@@ -4,7 +4,7 @@
 PYTHON ?= python
 
 .PHONY: test test-fast bench bench-json bench-edge quickstart docs-check \
-	shim-check bench-diff
+	shim-check bench-diff trace-check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -21,9 +21,10 @@ bench-json:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.protocol_batch
 
 # PolyDot vs AGE over identical edge worker-pool traces; refreshes
-# BENCH_edge.json at the repo root.
+# BENCH_edge.json at the repo root.  TRACE=1 additionally writes a
+# Perfetto-loadable BENCH_edge.trace.json sidecar (report unchanged).
 bench-edge:
-	PYTHONPATH=src $(PYTHON) -m benchmarks.edge_runtime
+	PYTHONPATH=src TRACE=$(TRACE) $(PYTHON) -m benchmarks.edge_runtime
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py
@@ -41,3 +42,9 @@ shim-check:
 # snapshots (deterministic leaves exact, wall-clock within a band).
 bench-diff:
 	$(PYTHON) tools/bench_diff.py
+
+# Generate a small trace end-to-end (replay + adaptive decision) and
+# verify the Chrome/Perfetto export: schema-valid, all three protocol
+# phases, per-worker scheduler events, >= 1 AutoPlanner decision.
+trace-check:
+	PYTHONPATH=src $(PYTHON) tools/trace_check.py

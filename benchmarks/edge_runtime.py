@@ -117,6 +117,7 @@ from repro.runtime import (
     sample_trace,
     summarize,
 )
+from repro.obs import TRACER, snapshot, write_chrome
 from repro.runtime.autoplan import _replay_seed
 
 from .common import repo_root, run_sharded_child, timeit, write_csv
@@ -654,6 +655,16 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
     # fewer workers banks the difference as extra straggler slack, which
     # is exactly how the paper's worker-count advantage becomes a
     # completion-time advantage under load.
+    #
+    # TRACE=1 turns the observability layer on for the whole run and
+    # writes a Perfetto-loadable sidecar (BENCH_edge.trace.json) next to
+    # the report.  The report itself is byte-identical either way: the
+    # tracer only *reads* already-decided timestamps, and the sidecar is
+    # a separate file that bench_diff ignores.
+    tracing = bool(os.environ.get("TRACE"))
+    if tracing:
+        TRACER.clear()
+        TRACER.enable()
     field = Field()
     rng = np.random.default_rng(0)
     shapes = BlockShapes(k=m, ma=m, mb=m, s=s, t=t)
@@ -740,6 +751,13 @@ def run(m: int = 32, s: int = 2, t: int = 2, z: int = 3, n_spare: int = 3,
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
+
+    if tracing:
+        trace_path = os.path.join(
+            repo_root(), JSON_NAME.replace(".json", ".trace.json")
+        )
+        write_chrome(trace_path, TRACER, metrics=snapshot())
+        print(f"trace: {trace_path} ({len(TRACER.events)} events)")
 
     ratio = scenarios["stragglers_exp"]["polydot_over_age_p50"]
     return [

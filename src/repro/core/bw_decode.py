@@ -39,6 +39,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY
+from ..obs.tracer import TRACER
 from .gf import Field
 
 
@@ -221,7 +223,8 @@ def bw_decode_evals(
     check = plan.decode_check_matrix()  # [n_total, thr]
     rng = rng or np.random.default_rng(0)
     ys = flat[ids]
-    for _ in range(max_combine_tries):
+    for attempt in range(max_combine_tries):
+        REGISTRY.counter("bw.combine_attempts").inc()
         u = _combine(field, ys, rng)
         _, err = _bw_locate(field, xs, v, u, thr, e)
         clean_ids = ids[np.setdiff1d(np.arange(k), err)]
@@ -229,12 +232,19 @@ def bw_decode_evals(
         w_dec = plan.decode_matrix_cached(sub)
         coeffs = field.matmul(w_dec, flat[sub])
         pred = field.matmul(check[clean_ids], coeffs)
-        if np.array_equal(pred, flat[clean_ids]):
+        ok = np.array_equal(pred, flat[clean_ids])
+        if TRACER.enabled:
+            TRACER.event(
+                "bw_decode.combine", attempt=attempt, e=int(e),
+                n_responders=k, n_flagged=int(err.size), ok=bool(ok),
+            )
+        if ok:
             bad = ids[err]
             if bad.size:
                 pred_bad = field.matmul(check[bad], coeffs)
                 bad = bad[np.any(pred_bad != flat[bad], axis=1)]
             return coeffs, np.sort(bad)
+    REGISTRY.counter("bw.combine_exhausted").inc()
     raise BWDecodeError(
         f"payload verification failed {max_combine_tries} times — "
         f"more than e={e} corrupted responders among {k}"

@@ -26,6 +26,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.tracer import TRACER
 from .constructions import PlanConfig, Scheme
 from .gf import Field
 
@@ -136,8 +137,11 @@ class CMPCPlan:
         per-call host loop in the replay hot path."""
         v = self.__dict__.get("_decode_check_v")
         if v is None:
+            _DECODE_CHECK_STATS["misses"] += 1
             v = self.field.vandermonde(self.alphas, range(self.decode_threshold))
             object.__setattr__(self, "_decode_check_v", v)
+        else:
+            _DECODE_CHECK_STATS["hits"] += 1
         return v
 
     def decode_matrix_cached(self, worker_ids: Sequence[int]) -> np.ndarray:
@@ -253,6 +257,10 @@ _PLAN_BY_SIG: dict = {}
 # C(n_total, threshold) distinct subsets but in practice a handful.
 _SUBSET_CACHE_STATS = {"hits": 0, "misses": 0}
 _SUBSET_CACHE_MAX = 512
+# The per-plan decode_check_matrix memo (the master's consistency-check
+# Vandermonde), counted process-wide like the other two cache spellings
+# so obs.metrics can report all three behind one snapshot().
+_DECODE_CHECK_STATS = {"hits": 0, "misses": 0}
 # Plans pin O(n_total^2) host matrices (plus device constants once the
 # batched engine touches them), and callers key on runtime batch sizes,
 # so bound the cache: oldest-inserted entries are evicted first.
@@ -302,9 +310,11 @@ def get_plan(
     if plan is None:
         sibling = _PLAN_BY_SIG.get(sig)
         if sibling is not None and sibling.n_spare != n_spare:
+            outcome = "replan"
             _PLAN_CACHE_STATS["replans"] += 1
             plan = _replan_n_spare(sibling, n_spare, seed)
         else:
+            outcome = "miss"
             _PLAN_CACHE_STATS["misses"] += 1
             plan = make_plan(scheme, shapes, field=field, n_spare=n_spare, seed=seed)
         _PLAN_CACHE[key] = plan
@@ -312,7 +322,16 @@ def get_plan(
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
             _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
     else:
+        outcome = "hit"
         _PLAN_CACHE_STATS["hits"] += 1
+    if TRACER.enabled:
+        TRACER.event(
+            "planner.get_plan",
+            outcome=outcome,
+            method=scheme.method,
+            n_workers=scheme.n_workers,
+            n_spare=n_spare,
+        )
     return plan
 
 
@@ -354,6 +373,16 @@ def subset_cache_info() -> dict:
 
 def subset_cache_clear() -> None:
     _SUBSET_CACHE_STATS.update(hits=0, misses=0)
+
+
+def decode_check_cache_info() -> dict:
+    """Process-wide {'hits', 'misses'} of the per-plan
+    ``decode_check_matrix`` memo."""
+    return dict(_DECODE_CHECK_STATS)
+
+
+def decode_check_cache_clear() -> None:
+    _DECODE_CHECK_STATS.update(hits=0, misses=0)
 
 
 # Evaluation points are prefixes of ONE seeded permutation of the

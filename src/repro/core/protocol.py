@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.modmatmul.ops import mod_matmul, polyeval
+from ..obs.tracer import TRACER
 from .gf import Field, random_field_device
 from .planner import BlockShapes, CMPCPlan
 
@@ -156,17 +157,18 @@ def share_a(plan: CMPCPlan, a: np.ndarray, rng: np.random.Generator) -> jnp.ndar
     s, t = plan.scheme.s, plan.scheme.t
     br, bc = sh.blk_a
     dp = device_plan(plan)  # constants uploaded once per plan, not per call
-    at = np.ascontiguousarray(np.asarray(a, np.int64).T)  # [ma, k]
-    blocks = (
-        at.reshape(t, br, s, bc).transpose(0, 2, 1, 3).reshape(t * s, br, bc)
-    ).astype(np.int32)
-    stack = _share_stack(
-        blocks, len(plan.scheme.fa_powers), dp.a_pos_h, dp.sa_pos_h,
-        plan.field.p, rng,
-    )
-    # the numpy stack goes straight into the jitted kernel: an eager
-    # jnp.asarray here costs more than the kernel's own conversion
-    return polyeval(dp.va, stack, p=plan.field.p)
+    with TRACER.span("protocol.phase1.share_a"):
+        at = np.ascontiguousarray(np.asarray(a, np.int64).T)  # [ma, k]
+        blocks = (
+            at.reshape(t, br, s, bc).transpose(0, 2, 1, 3).reshape(t * s, br, bc)
+        ).astype(np.int32)
+        stack = _share_stack(
+            blocks, len(plan.scheme.fa_powers), dp.a_pos_h, dp.sa_pos_h,
+            plan.field.p, rng,
+        )
+        # the numpy stack goes straight into the jitted kernel: an eager
+        # jnp.asarray here costs more than the kernel's own conversion
+        return polyeval(dp.va, stack, p=plan.field.p)
 
 
 def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndarray:
@@ -174,15 +176,16 @@ def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndar
     s, t = plan.scheme.s, plan.scheme.t
     br, bc = sh.blk_b
     dp = device_plan(plan)
-    bm = np.asarray(b, np.int64)
-    blocks = (
-        bm.reshape(s, br, t, bc).transpose(0, 2, 1, 3).reshape(s * t, br, bc)
-    ).astype(np.int32)
-    stack = _share_stack(
-        blocks, len(plan.scheme.fb_powers), dp.b_pos_h, dp.sb_pos_h,
-        plan.field.p, rng,
-    )
-    return polyeval(dp.vb, stack, p=plan.field.p)
+    with TRACER.span("protocol.phase1.share_b"):
+        bm = np.asarray(b, np.int64)
+        blocks = (
+            bm.reshape(s, br, t, bc).transpose(0, 2, 1, 3).reshape(s * t, br, bc)
+        ).astype(np.int32)
+        stack = _share_stack(
+            blocks, len(plan.scheme.fb_powers), dp.b_pos_h, dp.sb_pos_h,
+            plan.field.p, rng,
+        )
+        return polyeval(dp.vb, stack, p=plan.field.p)
 
 
 # ----------------------------------------------------------------------
@@ -190,7 +193,8 @@ def share_b(plan: CMPCPlan, b: np.ndarray, rng: np.random.Generator) -> jnp.ndar
 # ----------------------------------------------------------------------
 def worker_multiply(plan: CMPCPlan, fa: jnp.ndarray, fb: jnp.ndarray) -> jnp.ndarray:
     """H(alpha_n) = F_A(alpha_n) @ F_B(alpha_n), batched over workers."""
-    return mod_matmul(fa, fb, p=plan.field.p)
+    with TRACER.span("protocol.phase2.worker_multiply"):
+        return mod_matmul(fa, fb, p=plan.field.p)
 
 
 def degree_reduce(
@@ -214,22 +218,26 @@ def degree_reduce(
     p = plan.field.p
     n = plan.n_workers
     dp = device_plan(plan)
-    ids, mix_t = _phase2_selection(plan, worker_ids)
-    blk = h.shape[-2:]
-    h_sel = h[jnp.asarray(ids)]
-    h_flat = h_sel.reshape(n, -1)
-    i_flat = mod_matmul(mix_t, h_flat, p=p)  # [n_total, blk]
-    # Workers' blinding terms R_w^{(n)}: each of the n Phase-2 workers
-    # contributes z random matrices; only their sum enters I(x).
-    r = plan.field.random(rng, (n, plan.scheme.z) + blk)
-    r_sum = np.sum(r, axis=0) % p  # [z, blk]
-    noise_flat = mod_matmul(
-        dp.vnoise,
-        jnp.asarray(r_sum.reshape(plan.scheme.z, -1).astype(np.int32)),
-        p=p,
-    )
-    i_evals = (i_flat.astype(jnp.uint32) + noise_flat.astype(jnp.uint32)) % jnp.uint32(p)
-    return i_evals.astype(jnp.int32).reshape((plan.n_total,) + blk)
+    with TRACER.span("protocol.phase2.degree_reduce"):
+        ids, mix_t = _phase2_selection(plan, worker_ids)
+        blk = h.shape[-2:]
+        h_sel = h[jnp.asarray(ids)]
+        h_flat = h_sel.reshape(n, -1)
+        i_flat = mod_matmul(mix_t, h_flat, p=p)  # [n_total, blk]
+        # Workers' blinding terms R_w^{(n)}: each of the n Phase-2
+        # workers contributes z random matrices; only their sum enters
+        # I(x).
+        r = plan.field.random(rng, (n, plan.scheme.z) + blk)
+        r_sum = np.sum(r, axis=0) % p  # [z, blk]
+        noise_flat = mod_matmul(
+            dp.vnoise,
+            jnp.asarray(r_sum.reshape(plan.scheme.z, -1).astype(np.int32)),
+            p=p,
+        )
+        i_evals = (
+            i_flat.astype(jnp.uint32) + noise_flat.astype(jnp.uint32)
+        ) % jnp.uint32(p)
+        return i_evals.astype(jnp.int32).reshape((plan.n_total,) + blk)
 
 
 # ----------------------------------------------------------------------
@@ -288,10 +296,11 @@ def reconstruct(
     prefix, whose decode matrix is precomputed on the plan.
     """
     thr = plan.decode_threshold
-    ids, w = _decode_selection(plan, worker_ids)
-    sel = np.asarray(i_evals)[ids].reshape(thr, -1)
-    coeffs = plan.field.matmul(w, sel)  # [thr, blk_flat]
-    return assemble_y(plan, coeffs)
+    with TRACER.span("protocol.phase3.reconstruct"):
+        ids, w = _decode_selection(plan, worker_ids)
+        sel = np.asarray(i_evals)[ids].reshape(thr, -1)
+        coeffs = plan.field.matmul(w, sel)  # [thr, blk_flat]
+        return assemble_y(plan, coeffs)
 
 
 def reconstruct_corrected(
@@ -489,16 +498,19 @@ def share_batched(
     sharded batched engine and the batched edge runtime.
     """
     dp = device_plan(plan)
-    return _share_batched_jit(
-        a, b, key, dp.va, dp.vb, dp.a_pos, dp.sa_pos, dp.b_pos, dp.sb_pos,
-        p=plan.field.p,
-        s=plan.scheme.s,
-        t=plan.scheme.t,
-        z=plan.scheme.z,
-        na=len(plan.scheme.fa_powers),
-        nb=len(plan.scheme.fb_powers),
-        backend=backend,
-    )
+    with TRACER.span(
+        "protocol.phase1.share_batched", batch=int(a.shape[0]), backend=backend
+    ):
+        return _share_batched_jit(
+            a, b, key, dp.va, dp.vb, dp.a_pos, dp.sa_pos, dp.b_pos, dp.sb_pos,
+            p=plan.field.p,
+            s=plan.scheme.s,
+            t=plan.scheme.t,
+            z=plan.scheme.z,
+            na=len(plan.scheme.fa_powers),
+            nb=len(plan.scheme.fb_powers),
+            backend=backend,
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("p", "t", "backend"))
@@ -694,30 +706,35 @@ def run_batched(
         ids2 = jnp.asarray(ids2_h.astype(np.int32))
     ids3, decode_w = _phase3_device_selection(plan, phase3_ids)
 
-    y = _run_batched_jit(
-        a,
-        b,
-        jax.random.PRNGKey(seed),
-        dp.va,
-        dp.vb,
-        mix_t,
-        dp.vnoise,
-        decode_w,
-        dp.a_pos,
-        dp.sa_pos,
-        dp.b_pos,
-        dp.sb_pos,
-        ids2,
-        ids3,
-        p=p,
-        s=plan.scheme.s,
-        t=plan.scheme.t,
-        z=plan.scheme.z,
-        n_workers=plan.n_workers,
-        na=len(plan.scheme.fa_powers),
-        nb=len(plan.scheme.fb_powers),
-        backend=backend,
-    )
+    # All three phases execute inside one jit, so the span covers the
+    # whole dispatch (phase split is only visible on the sharded path).
+    with TRACER.span(
+        "protocol.run_batched", batch=int(a.shape[0]), backend=backend
+    ):
+        y = _run_batched_jit(
+            a,
+            b,
+            jax.random.PRNGKey(seed),
+            dp.va,
+            dp.vb,
+            mix_t,
+            dp.vnoise,
+            decode_w,
+            dp.a_pos,
+            dp.sa_pos,
+            dp.b_pos,
+            dp.sb_pos,
+            ids2,
+            ids3,
+            p=p,
+            s=plan.scheme.s,
+            t=plan.scheme.t,
+            z=plan.scheme.z,
+            n_workers=plan.n_workers,
+            na=len(plan.scheme.fa_powers),
+            nb=len(plan.scheme.fb_powers),
+            backend=backend,
+        )
     return np.asarray(y, np.int64), batch_trace(plan, int(a.shape[0]))
 
 
@@ -759,30 +776,35 @@ def run_batched_sharded(
     p = plan.field.p
     batch = int(a.shape[0])
     kshare, knoise = jax.random.split(jax.random.PRNGKey(seed), 2)
-    fa, fb = share_batched(plan, a, b, kshare, backend=backend)
+    with TRACER.span(
+        "protocol.run_batched_sharded", batch=batch, mode=mode, backend=backend
+    ):
+        fa, fb = share_batched(plan, a, b, kshare, backend=backend)
 
-    n = plan.n_workers
-    blk_y = plan.shapes.blk_y
-    noise = np.asarray(
-        random_field_device(knoise, (batch, n, plan.scheme.z) + blk_y, p)
-    )
-    i_evals = run_phase2_sharded(
-        plan,
-        fa,
-        fb,
-        noise,
-        mesh,
-        axis=axis,
-        mode=mode,
-        matmul_backend=backend,
-        worker_ids=None if phase2_ids is None else np.asarray(phase2_ids),
-    )  # [batch, n_total, bry, bcy]
+        n = plan.n_workers
+        blk_y = plan.shapes.blk_y
+        noise = np.asarray(
+            random_field_device(knoise, (batch, n, plan.scheme.z) + blk_y, p)
+        )
+        with TRACER.span("protocol.phase2.sharded_exchange", mode=mode):
+            i_evals = run_phase2_sharded(
+                plan,
+                fa,
+                fb,
+                noise,
+                mesh,
+                axis=axis,
+                mode=mode,
+                matmul_backend=backend,
+                worker_ids=None if phase2_ids is None else np.asarray(phase2_ids),
+            )  # [batch, n_total, bry, bcy]
 
-    ids3, decode_w = _phase3_device_selection(plan, phase3_ids)
-    y = _decode_batched_jit(
-        jnp.asarray(i_evals), decode_w, ids3,
-        p=p, t=plan.scheme.t, backend=backend,
-    )
+        ids3, decode_w = _phase3_device_selection(plan, phase3_ids)
+        with TRACER.span("protocol.phase3.decode_batched"):
+            y = _decode_batched_jit(
+                jnp.asarray(i_evals), decode_w, ids3,
+                p=p, t=plan.scheme.t, backend=backend,
+            )
     return np.asarray(y, np.int64), batch_trace(plan, batch)
 
 
@@ -799,9 +821,10 @@ def run(
 ) -> Tuple[np.ndarray, Trace]:
     """Full protocol: returns (Y = A^T B mod p, communication trace)."""
     rng = np.random.default_rng(seed)
-    fa = share_a(plan, a, rng)
-    fb = share_b(plan, b, rng)
-    h = worker_multiply(plan, fa, fb)
-    i_evals = degree_reduce(plan, h, rng, worker_ids=phase2_ids)
-    y = reconstruct(plan, i_evals, worker_ids=phase3_ids)
+    with TRACER.span("protocol.run"):
+        fa = share_a(plan, a, rng)
+        fb = share_b(plan, b, rng)
+        h = worker_multiply(plan, fa, fb)
+        i_evals = degree_reduce(plan, h, rng, worker_ids=phase2_ids)
+        y = reconstruct(plan, i_evals, worker_ids=phase3_ids)
     return y, batch_trace(plan, 1)

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.gf import P_DEFAULT, mod_matmul_f32
+from ...obs.metrics import REGISTRY
+from ...obs.tracer import TRACER
 from .kernel import modmatmul_pallas
 
 
@@ -109,7 +111,16 @@ def mod_matmul(
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "f32limb"
 
+    # This body runs at trace time (the wrapper is jitted), so each
+    # event records one *compilation*'s backend + tile choice — the
+    # shape/backend signature, not a per-call sample.
     if backend == "f32limb":
+        REGISTRY.counter("kernels.modmatmul_lowerings").inc()
+        if TRACER.enabled:
+            TRACER.event(
+                "modmatmul.lower", backend="f32limb",
+                m=int(a.shape[-2]), k=int(a.shape[-1]), n=int(b.shape[-1]),
+            )
         return mod_matmul_f32(a, b, p)
 
     if backend != "pallas":
@@ -124,6 +135,13 @@ def mod_matmul(
     bm = bm or tm
     bn = bn or tn
     bk = bk or tk
+    REGISTRY.counter("kernels.modmatmul_lowerings").inc()
+    if TRACER.enabled:
+        TRACER.event(
+            "modmatmul.lower", backend="pallas",
+            m=int(m), k=int(k), n=int(n),
+            bm=int(bm), bn=int(bn), bk=int(bk), interpret=bool(interpret),
+        )
     ap = _pad_to(a, bm, bk)
     bp = _pad_to(b, bk, bn)
 

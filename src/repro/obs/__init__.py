@@ -1,0 +1,61 @@
+"""Unified observability: two-clock tracing, metrics, exporters.
+
+``repro.obs`` is imported *by* ``repro.core`` and ``repro.runtime``
+(the instrumented layers), so nothing here may import them back —
+the registry's default cache probes defer their planner imports to
+snapshot time for exactly that reason.
+
+Quick use::
+
+    from repro import obs
+    obs.enable()
+    ... run a replay / benchmark ...
+    obs.write_chrome("trace.json", obs.TRACER, metrics=obs.snapshot())
+
+Span taxonomy and metric names: ``docs/observability.md``.
+"""
+from .tracer import (  # noqa: F401
+    TRACER,
+    Tracer,
+    Span,
+    disable,
+    enable,
+    get_tracer,
+)
+from .metrics import (  # noqa: F401
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    snapshot,
+)
+from .export import (  # noqa: F401
+    to_chrome,
+    to_jsonl,
+    validate_chrome,
+    write_chrome,
+    write_jsonl,
+)
+
+__all__ = [
+    "TRACER",
+    "Tracer",
+    "Span",
+    "enable",
+    "disable",
+    "get_tracer",
+    "REGISTRY",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "snapshot",
+    "to_chrome",
+    "to_jsonl",
+    "validate_chrome",
+    "write_chrome",
+    "write_jsonl",
+]

@@ -45,6 +45,8 @@ import numpy as np
 from ..core.closed_form import predict
 from ..core.constructions import PlanConfig
 from ..core.planner import BlockShapes, CMPCPlan, get_plan_for
+from ..obs.metrics import REGISTRY
+from ..obs.tracer import TRACER
 from .metrics import (
     DEFAULT_ESTIMATE,
     ObservedRun,
@@ -69,6 +71,11 @@ class PlanDecision:
     reason: str  # "prior" | "explore" | "observed" | "forced"
     switched: bool  # construction differs from the previous replay
     respared: bool  # only the spare count changed
+    # Trace id of this decision's ``autoplan.decide`` event (0 when the
+    # tracer was disabled).  The runtimes echo it as ``decision_id`` on
+    # the replay span this decision produced, so a trace links every
+    # replay back to the reasoning that picked its construction.
+    obs_id: int = 0
 
 
 def _replay_seed(seed: int, k: int) -> int:
@@ -303,6 +310,21 @@ class AutoPlanner:
             switched=switched,
             respared=respared,
         )
+        REGISTRY.counter("autoplan.decisions").inc()
+        REGISTRY.counter(f"autoplan.reason.{reason}").inc()
+        if TRACER.enabled:
+            eid = TRACER.event(
+                "autoplan.decide",
+                replay=decision.replay,
+                config=decision.config.label(),
+                n_spare=decision.config.n_spare,
+                pool=pool_size,
+                predicted=float(decision.predicted),
+                reason=reason,
+                switched=switched,
+                respared=respared,
+            )
+            decision = dataclasses.replace(decision, obs_id=eid)
         self.decisions.append(decision)
         return decision
 
@@ -474,6 +496,13 @@ def run_adaptive_over_pool(
             compute_scale=scale,
             decode_mode=decode_mode,
             error_budget=e_k if e_k > 0 else "auto",
+            # Links this replay's trace records to the decision that
+            # picked its construction (decision_id -> autoplan.decide).
+            obs_attrs={
+                "replay": idx,
+                "decision_id": decision.obs_id,
+                "config": decision.config.label(),
+            },
         )
         planner.observe(decision.config, run.metrics)
         ys.append(run.y)

@@ -91,13 +91,43 @@ class PipelineMetrics:
     phase1_overlap: float  # upload time overlapped with earlier replays
     trace: Trace  # aggregate communication across all replays
 
+    def __post_init__(self):
+        # Loud guards: an empty or time-inverted pipeline is a harness
+        # bug, not a statistic — fail here instead of emitting NaN /
+        # division-by-zero ratios downstream.
+        if self.depth < 1:
+            raise ValueError(
+                f"pipeline needs at least one replay, got depth={self.depth}"
+            )
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if not np.isfinite(self.makespan) or self.makespan < 0:
+            raise ValueError(
+                f"makespan must be finite and >= 0, got {self.makespan}"
+            )
+
     @property
     def spans(self) -> np.ndarray:
         return self.completions - self.starts
 
+    @property
+    def overlap_ratio(self) -> float:
+        """Phase-1 overlap as a fraction of the makespan.  A zero
+        makespan (every leg instantaneous) has no overlap to attribute,
+        so the ratio is a defined 0.0 — never a division error."""
+        if self.makespan <= 0:
+            return 0.0
+        return float(self.phase1_overlap / self.makespan)
+
 
 def summarize(runs: List[RunMetrics]) -> Dict:
-    """Aggregate a list of runs into distribution-level statistics."""
+    """Aggregate a list of runs into distribution-level statistics.
+
+    An empty list is a defined outcome, not an error: callers summarize
+    whatever subset of runs survived (e.g. all-failure fault sweeps),
+    so ``summarize([])`` returns ``{"runs": 0}`` — no percentile or
+    mean is ever taken over zero samples (regression-tested).
+    """
     if not runs:
         return {"runs": 0}
     times = np.array([r.completion_time for r in runs])

@@ -49,6 +49,7 @@ import numpy as np
 
 from ..core import protocol as proto
 from ..core.planner import CMPCPlan
+from ..obs.metrics import REGISTRY
 from .metrics import PipelineMetrics, RunMetrics
 from .pool import WorkerTrace
 from .scheduler import (
@@ -255,6 +256,14 @@ def run_pipeline_over_pool(
         compute_i_all = _batched_compute_closure(
             plan_k, fa, fb, rng, batch, mesh, axis, mode, backend
         )
+        # Trace annotations: lane index + absolute start, plus the
+        # deciding PlanDecision when a planner drives the pipeline
+        # (decision_id links the replay span to its autoplan.decide
+        # event).
+        obs_k = {"replay": k, "t_start": float(starts[k]), "batch": batch}
+        if decision is not None:
+            obs_k["decision_id"] = decision.obs_id
+            obs_k["config"] = decision.config.label()
         res = _replay_events(
             plan_k,
             trace,
@@ -268,6 +277,7 @@ def run_pipeline_over_pool(
             decode_mode=mode_k,
             error_budget=budget_k,
             max_subset_tries=max_subset_tries,
+            obs_attrs=obs_k,
         )
         # Straggler cancellation: a worker outside replay k's Phase-2
         # set abandons its (now useless) H-compute when the set is
@@ -311,6 +321,10 @@ def run_pipeline_over_pool(
         phase1_overlap=phase1_overlap,
         trace=agg_trace,
     )
+    REGISTRY.counter("pipeline.runs").inc()
+    REGISTRY.gauge("pipeline.occupancy").set(metrics.occupancy)
+    REGISTRY.gauge("pipeline.makespan").set(metrics.makespan)
+    REGISTRY.gauge("pipeline.overlap_ratio").set(metrics.overlap_ratio)
     return PipelineRun(
         y=np.stack(ys), replay_metrics=replay_metrics, metrics=metrics
     )

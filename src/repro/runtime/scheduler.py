@@ -84,6 +84,8 @@ from ..core import protocol as proto
 from ..core.bw_decode import BWDecodeError, bw_decode_evals, bw_system_size
 from ..core.distributed import run_phase2_sharded
 from ..core.planner import CMPCPlan
+from ..obs.metrics import REGISTRY
+from ..obs.tracer import TRACER
 from .metrics import RunMetrics
 from .pool import WorkerTrace
 
@@ -146,6 +148,77 @@ class _Replay:
     n_arrived: int
 
 
+def _emit_replay_obs(
+    plan: CMPCPlan,
+    res: _Replay,
+    trace: WorkerTrace,
+    alive: np.ndarray,
+    share_at: np.ndarray,
+    finish_at: np.ndarray,
+    arrived: list,
+    bw_log: list,
+    attrs: dict,
+) -> None:
+    """Render one replay's event-loop timeline as simulated-clock trace
+    records: per-worker ``("worker", w)`` lanes carry the share /
+    compute / respond spans (the flame chart of workers x phases), the
+    ``("replay", k)`` lane carries the whole-replay span, the Phase-2
+    barrier, BW attempts, and decode acceptance.
+
+    Every timestamp is read off the already-decided replay — nothing
+    here draws randomness or reorders events, so enabling the tracer
+    cannot perturb the (deterministic) replay it records.
+    """
+    ridx = int(attrs.get("replay", 0))
+    rtrack = ("replay", ridx)
+    t_start = float(attrs.get("t_start", 0.0))
+    p2 = {int(i) for i in res.phase2_ids}
+    comm = _comm_trace(
+        plan, int(alive.sum()), res.n_arrived, int(attrs.get("batch", 1))
+    )
+    TRACER.sim_span(
+        "replay", t_start, res.completion, track=rtrack,
+        wire_bytes_total=comm.total_bytes,
+        phase1_bytes=comm.phase1_bytes,
+        phase2_bytes=comm.phase2_bytes,
+        phase3_bytes=comm.phase3_bytes,
+        **attrs,
+    )
+    for w in np.flatnonzero(alive):
+        w = int(w)
+        wtrack = ("worker", w)
+        TRACER.sim_span(
+            "phase1.share", t_start, float(share_at[w]), track=wtrack,
+            replay=ridx, worker=w,
+        )
+        TRACER.sim_span(
+            "phase2.compute", float(share_at[w]), float(finish_at[w]),
+            track=wtrack, replay=ridx, worker=w, in_set=w in p2,
+        )
+    TRACER.sim_event(
+        "phase2.barrier", res.phase2_set_time, track=rtrack,
+        replay=ridx, n_set=int(res.phase2_ids.size),
+    )
+    for t_arr, w in arrived:
+        TRACER.sim_span(
+            "phase3.respond", res.phase2_set_time, float(t_arr),
+            track=("worker", int(w)), replay=ridx, worker=int(w),
+        )
+    for t_a, e_eff, window, ok in bw_log:
+        TRACER.sim_event(
+            "phase3.bw_attempt", float(t_a), track=rtrack,
+            replay=ridx, e_eff=int(e_eff), window=int(window), ok=bool(ok),
+        )
+    TRACER.sim_event(
+        "phase3.decode", res.completion, track=rtrack,
+        replay=ridx,
+        n_arrived=res.n_arrived,
+        n_responders=int(res.responder_ids.size),
+        n_rejected=int(res.rejected_ids.size),
+        n_corrected=int(res.corrected_ids.size),
+    )
+
+
 def _check_pool(plan: CMPCPlan, trace: WorkerTrace) -> np.ndarray:
     """Validate the trace against the plan; returns the alive mask."""
     if trace.n != plan.n_total:
@@ -176,6 +249,7 @@ def _replay_events(
     decode_mode: str = "detect",
     error_budget: int = 0,
     max_subset_tries: int = DEFAULT_SUBSET_TRIES,
+    obs_attrs: Optional[dict] = None,
 ) -> _Replay:
     """The shared event loop: timestamps, subsets, and the decode search.
 
@@ -212,7 +286,15 @@ def _replay_events(
     window) and acceptance waits for ``thr + 2 * error_budget``
     responses; ``max_subset_tries`` bounds the ``"detect"`` subset
     search per arrival.
+
+    ``obs_attrs`` annotates this replay's trace records when the
+    process tracer is enabled — the pipelined/adaptive runtimes pass
+    ``replay`` (lane index), ``t_start`` (absolute pipeline start), and
+    the ``decision_id``/``config`` of the :class:`PlanDecision` that
+    picked the construction, linking each decision to the replay it
+    decided.
     """
+    tracing = TRACER.enabled
     p = plan.field.p
     share_at = trace.share_delay if share_arrival is None else share_arrival
     phase1_last = float(share_at[alive].max())
@@ -241,6 +323,16 @@ def _replay_events(
     first_response = float("nan")
     decode_cache: dict = {}  # subset id-tuple -> coeffs, across arrivals
     bw_attempts = 0  # correct-mode decode attempts, for the failure census
+    bw_log: list = []  # (t, e_eff, window, ok) per attempt, when tracing
+
+    def _finish(res: _Replay) -> _Replay:
+        REGISTRY.counter("runtime.replays").inc()
+        if tracing:
+            _emit_replay_obs(
+                plan, res, trace, alive, share_at, finish_at, arrived,
+                bw_log, obs_attrs or {},
+            )
+        return res
 
     while events:
         t_now, _, kind, w = heapq.heappop(events)
@@ -308,14 +400,19 @@ def _replay_events(
                 [wk for _, wk in arrived[: bw_system_size(thr, e_eff)]]
             )
             bw_attempts += 1
+            REGISTRY.counter("runtime.bw_attempts").inc()
             try:
                 coeffs, corrected = bw_decode_evals(
                     plan, i_all, window, e_eff, rng=rng
                 )
             except BWDecodeError:
+                if tracing:
+                    bw_log.append((t_now, e_eff, len(window), False))
                 continue  # > e_eff corrupt in the window: wait for more
+            if tracing:
+                bw_log.append((t_now, e_eff, len(window), True))
             responders = window[~np.isin(window, corrected)]
-            return _Replay(
+            return _finish(_Replay(
                 coeffs=coeffs,
                 phase2_ids=phase2_ids,
                 responder_ids=np.sort(responders),
@@ -327,7 +424,7 @@ def _replay_events(
                 first_response=float(first_response),
                 completion=float(t_now + master_decode_cost),
                 n_arrived=len(arrived),
-            )
+            ))
         if len(arrived) < plan.decode_threshold + verify_extras:
             continue
         accepted = _try_decode(
@@ -337,7 +434,7 @@ def _replay_events(
         if accepted is None:
             continue
         coeffs, responder_ids, confirmed_by, rejected = accepted
-        return _Replay(
+        return _finish(_Replay(
             coeffs=coeffs,
             phase2_ids=phase2_ids,
             responder_ids=responder_ids,
@@ -349,8 +446,9 @@ def _replay_events(
             first_response=float(first_response),
             completion=float(t_now + master_decode_cost),
             n_arrived=len(arrived),
-        )
+        ))
 
+    REGISTRY.counter("runtime.decode_failures").inc()
     if decode_mode == "correct":
         raise DecodeFailure(
             f"events exhausted before a Berlekamp-Welch decode: "
@@ -476,6 +574,7 @@ def run_over_pool(
     decode_mode: str = "detect",
     error_budget="auto",
     max_subset_tries: int = DEFAULT_SUBSET_TRIES,
+    obs_attrs: Optional[dict] = None,
 ) -> EdgeRun:
     """Execute Y = A^T B over the simulated pool described by ``trace``.
 
@@ -510,7 +609,7 @@ def run_over_pool(
         plan, trace, alive, compute_i_all, verify_extras, rng,
         master_decode_cost, compute_scale=compute_scale,
         decode_mode=decode_mode, error_budget=error_budget,
-        max_subset_tries=max_subset_tries,
+        max_subset_tries=max_subset_tries, obs_attrs=obs_attrs,
     )
     y = proto.assemble_y(plan, res.coeffs)
     return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
@@ -589,6 +688,7 @@ def run_batch_over_pool(
     decode_mode: str = "detect",
     error_budget="auto",
     max_subset_tries: int = DEFAULT_SUBSET_TRIES,
+    obs_attrs: Optional[dict] = None,
 ) -> BatchEdgeRun:
     """Replay a whole batch of products through ONE worker trace.
 
@@ -636,6 +736,7 @@ def run_batch_over_pool(
         master_decode_cost, compute_scale=compute_scale,
         decode_mode=decode_mode, error_budget=error_budget,
         max_subset_tries=max_subset_tries,
+        obs_attrs={**(obs_attrs or {}), "batch": batch},
     )
     y = _unfold_batched_y(plan, res.coeffs, batch)
 
@@ -709,25 +810,32 @@ def _try_decode(
     ids_by_arrival = [w for _, w in arrived]
     flat = i_all.reshape(i_all.shape[0], -1)
     seen = set()
-    for subset_pos in _candidate_subsets(
-        len(ids_by_arrival), thr, rng, max_subset_tries
+    # One wall span per decode search (not per subset candidate): the
+    # host-side price of Phase 3 at this arrival.
+    with TRACER.span(
+        "protocol.phase3.subset_search", n_arrived=len(ids_by_arrival)
     ):
-        if subset_pos in seen:
-            continue
-        seen.add(subset_pos)
-        subset = [ids_by_arrival[i] for i in subset_pos]
-        ids = np.sort(np.array(subset))
-        key = tuple(int(i) for i in ids)
-        coeffs = decode_cache.get(key)
-        if coeffs is None:
-            w_dec = plan.decode_matrix_cached(ids)
-            coeffs = plan.field.matmul(w_dec, flat[ids])
-            decode_cache[key] = coeffs
-        if verify_extras == 0:
-            return coeffs, ids, np.array([], np.int64), np.array([], np.int64)
-        others = np.array([j for j in ids_by_arrival if j not in subset])
-        pred = plan.field.matmul(vander_check[others], coeffs)
-        ok = np.all(pred == flat[others], axis=1)
-        if int(ok.sum()) >= verify_extras:
-            return coeffs, ids, others[ok], others[~ok]
+        for subset_pos in _candidate_subsets(
+            len(ids_by_arrival), thr, rng, max_subset_tries
+        ):
+            if subset_pos in seen:
+                continue
+            seen.add(subset_pos)
+            subset = [ids_by_arrival[i] for i in subset_pos]
+            ids = np.sort(np.array(subset))
+            key = tuple(int(i) for i in ids)
+            coeffs = decode_cache.get(key)
+            if coeffs is None:
+                w_dec = plan.decode_matrix_cached(ids)
+                coeffs = plan.field.matmul(w_dec, flat[ids])
+                decode_cache[key] = coeffs
+            if verify_extras == 0:
+                return (
+                    coeffs, ids, np.array([], np.int64), np.array([], np.int64)
+                )
+            others = np.array([j for j in ids_by_arrival if j not in subset])
+            pred = plan.field.matmul(vander_check[others], coeffs)
+            ok = np.all(pred == flat[others], axis=1)
+            if int(ok.sum()) >= verify_extras:
+                return coeffs, ids, others[ok], others[~ok]
     return None

@@ -15,6 +15,7 @@ def test_required_docs_exist():
         "docs/edge_runtime.md",
         "docs/kernel_design.md",
         "docs/autoplanner.md",
+        "docs/observability.md",
     ):
         assert os.path.exists(os.path.join(ROOT, rel)), f"{rel} missing"
 

@@ -169,3 +169,83 @@ def test_bench_diff_committed_snapshots_self_consistent():
             committed, sort_keys=True
         ):
             assert bench_diff.diff_file(ROOT, name, "HEAD", band=2.5) == []
+
+
+# ----------------------------------------------------------------------
+# trace tooling
+# ----------------------------------------------------------------------
+def test_bench_diff_cli_skips_trace_sidecars(tmp_path):
+    """A *.trace.json sidecar is never diffed — not even when named
+    explicitly, and not even when it doesn't exist."""
+    root = _git_repo_with_baseline(tmp_path, BASELINE)
+    res = subprocess.run(
+        [
+            sys.executable, os.path.join(ROOT, "tools", "bench_diff.py"),
+            "--root", root,
+            "--files", "BENCH.json", "BENCH.trace.json",
+        ],
+        capture_output=True, text=True,
+    )
+    assert res.returncode == 0, res.stderr
+    assert "BENCH.trace.json: trace sidecar, skipped" in res.stdout
+    assert "checked 1 files" in res.stdout
+
+
+def test_trace_check_passes_on_repo():
+    """tools/trace_check.py builds a small traced run end to end and
+    validates the Perfetto export (the `make trace-check` gate)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    res = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "trace_check.py")],
+        capture_output=True, text=True, env=env, cwd=ROOT,
+    )
+    assert res.returncode == 0, f"{res.stdout}\n{res.stderr}"
+    assert "0 problems" in res.stdout
+
+
+def test_trace_report_summarizes_a_trace(tmp_path):
+    """trace_report renders per-phase stats, straggler lanes, and the
+    embedded metrics from a written trace file."""
+    import numpy as np
+
+    from repro import obs
+    from repro.core.constructions import PlanConfig
+    from repro.core.planner import BlockShapes, get_plan_for
+    from repro.runtime import run_over_pool
+    from repro.runtime.pool import sample_trace
+
+    obs.TRACER.clear()
+    obs.enable()
+    try:
+        cfg = PlanConfig("age", 2, 2, 2).resolved()
+        plan = get_plan_for(cfg, BlockShapes(k=4, ma=4, mb=4, s=2, t=2))
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 7, (4, 4))
+        b = rng.integers(0, 7, (4, 4))
+        run_over_pool(plan, a, b, sample_trace(plan.n_total, seed=1), seed=0)
+        path = str(tmp_path / "trace.json")
+        obs.write_chrome(path, obs.TRACER, metrics=obs.snapshot())
+    finally:
+        obs.disable()
+        obs.TRACER.clear()
+    res = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "trace_report.py"), path],
+        capture_output=True, text=True,
+    )
+    assert res.returncode == 0, res.stderr
+    assert "phase2.compute" in res.stdout
+    assert "straggler attribution" in res.stdout
+    assert "subset_cache" in res.stdout
+    assert "wire bytes" in res.stdout
+
+
+def test_trace_report_missing_file_fails_loudly(tmp_path):
+    res = subprocess.run(
+        [
+            sys.executable, os.path.join(ROOT, "tools", "trace_report.py"),
+            str(tmp_path / "absent.trace.json"),
+        ],
+        capture_output=True, text=True,
+    )
+    assert res.returncode == 1
+    assert "not found" in res.stderr

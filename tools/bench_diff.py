@@ -180,11 +180,19 @@ def main() -> int:
     args = ap.parse_args()
 
     problems = []
+    checked = 0
     for name in args.files:
+        # Trace sidecars (BENCH_*.trace.json) are observability output —
+        # wall-clock spans differ on every run by construction, so they
+        # are never diffed even when listed explicitly.
+        if name.endswith(".trace.json"):
+            print(f"{name}: trace sidecar, skipped")
+            continue
+        checked += 1
         problems.extend(diff_file(args.root, name, args.ref, args.band))
     for msg in problems:
         print(f"BENCH-DRIFT {msg}", file=sys.stderr)
-    print(f"checked {len(args.files)} files, {len(problems)} drifts")
+    print(f"checked {checked} files, {len(problems)} drifts")
     return 1 if problems else 0
 
 

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Smoke-check the tracing layer end to end: run a small replay and an
+adaptive decision with the tracer on, export the Chrome/Perfetto trace,
+and verify it is schema-valid and structurally complete.
+
+Structural bar (the same one `make bench-edge TRACE=1` must clear):
+
+* schema-valid per :func:`repro.obs.validate_chrome`,
+* wall spans for all three protocol phases,
+* per-worker scheduler events (share / compute / respond lanes),
+* at least one ``autoplan.decide`` event whose id is echoed back as a
+  ``decision_id`` on a replay span (the decision -> replay link),
+* the metrics snapshot embedded under ``repro_metrics`` with all three
+  cache probes reporting.
+
+Exit 0 when everything holds; nonzero with one line per problem.
+Run via ``make trace-check`` (needs PYTHONPATH=src).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+REQUIRED_WALL_PREFIXES = (
+    "protocol.phase1.",
+    "protocol.phase2.",
+    "protocol.phase3.",
+)
+REQUIRED_SIM_NAMES = ("replay", "phase1.share", "phase2.compute", "phase3.respond")
+REQUIRED_PROBES = ("plan_cache", "subset_cache", "decode_check_cache")
+
+
+def build_trace():
+    """One batched replay plus a short adaptive stream, traced."""
+    from repro import obs
+    from repro.core import protocol
+    from repro.core.constructions import PlanConfig
+    from repro.core.planner import BlockShapes, get_plan_for
+    from repro.runtime import AutoPlanner, run_adaptive_over_pool, run_over_pool
+    from repro.runtime.pool import sample_trace
+
+    obs.TRACER.clear()
+    obs.enable()
+    cfg = PlanConfig("age", 2, 2, 2).resolved()
+    m = 4
+    plan = get_plan_for(cfg, BlockShapes(k=m, ma=m, mb=m, s=2, t=2), seed=0)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, plan.field.p, (m, m))
+    b = rng.integers(0, plan.field.p, (m, m))
+    want = plan.field.matmul(plan.field.asarray(a).T, plan.field.asarray(b))
+
+    # Direct protocol path: phase1/2/3 wall spans including reconstruct
+    # (the scheduler decodes in its own loop, so only this path emits
+    # protocol.phase3.reconstruct).
+    y, _ = protocol.run(plan, a, b, seed=0)
+    assert np.array_equal(y, want), "trace-check protocol.run != oracle"
+
+    res = run_over_pool(plan, a, b, sample_trace(plan.n_total, seed=1), seed=0)
+    assert np.array_equal(res.y, want), "trace-check replay decode != oracle"
+
+    K, batch = 3, 2
+    ab = rng.integers(0, plan.field.p, (K, batch, m, m))
+    bb = rng.integers(0, plan.field.p, (K, batch, m, m))
+    traces = [sample_trace(cfg.n_total + 2, seed=10 + k) for k in range(K)]
+    planner = AutoPlanner([PlanConfig("age", 2, 2, 2)], cost_m=m)
+    run_adaptive_over_pool(planner, ab, bb, traces, seed=0)
+    return obs
+
+
+def check(obs) -> list:
+    problems = []
+    chrome = obs.to_chrome(obs.TRACER, metrics=obs.snapshot())
+    problems += [f"schema: {p}" for p in obs.validate_chrome(chrome)]
+
+    events = obs.TRACER.events
+    names = {e["name"] for e in events}
+    for prefix in REQUIRED_WALL_PREFIXES:
+        if not any(n.startswith(prefix) for n in names):
+            problems.append(f"no wall span named {prefix}*")
+    for name in REQUIRED_SIM_NAMES:
+        if name not in names:
+            problems.append(f"no sim event named {name!r}")
+    worker_lanes = {
+        tuple(e["track"])
+        for e in events
+        if e["clock"] == "sim" and e["track"][0] == "worker"
+    }
+    if len(worker_lanes) < 2:
+        problems.append(f"expected >= 2 worker lanes, got {sorted(worker_lanes)}")
+
+    decides = {e["id"] for e in events if e["name"] == "autoplan.decide"}
+    if not decides:
+        problems.append("no autoplan.decide event")
+    linked = {
+        e["attrs"].get("decision_id")
+        for e in events
+        if e["name"] == "replay" and "decision_id" in e["attrs"]
+    }
+    if not linked:
+        problems.append("no replay span carries a decision_id")
+    elif not linked <= decides:
+        problems.append(f"dangling decision_id(s): {sorted(linked - decides)}")
+
+    metrics = chrome.get("repro_metrics", {})
+    for probe in REQUIRED_PROBES:
+        info = metrics.get("probes", {}).get(probe)
+        if not isinstance(info, dict) or "error" in (info or {}):
+            problems.append(f"probe {probe!r} not reporting: {info!r}")
+
+    # The file round-trip the bench sidecar uses.
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "trace.json")
+        obs.write_chrome(path, obs.TRACER, metrics=obs.snapshot())
+        with open(path) as f:
+            reloaded = json.load(f)
+        problems += [f"reloaded schema: {p}" for p in obs.validate_chrome(reloaded)]
+    return problems
+
+
+def main() -> int:
+    obs = build_trace()
+    try:
+        problems = check(obs)
+    finally:
+        obs.disable()
+        obs.TRACER.clear()
+    for msg in problems:
+        print(f"TRACE-CHECK {msg}", file=sys.stderr)
+    print(f"trace-check: {len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""Summarize a Chrome/Perfetto trace emitted by the observability layer.
+
+Reads the ``BENCH_edge.trace.json`` sidecar (or any trace written by
+:func:`repro.obs.write_chrome`) and prints, without needing the Perfetto
+UI:
+
+* **per-phase durations** — p50/p95/max per span name, wall-clock and
+  simulated-clock tracks reported separately (wall in microseconds, sim
+  in simulated seconds),
+* **straggler attribution** — per worker lane, total simulated time in
+  ``phase2.compute`` and mean ``phase3.respond`` latency, slowest lanes
+  first: the workers that push the fastest-subset barrier out,
+* **cache hit rates and counters** — from the embedded ``repro_metrics``
+  snapshot (plan / subset / decode-check probes, registry counters),
+* **bytes per link** — the ``pipeline``/``replay`` span attributes that
+  carry wire-byte totals, when present.
+
+Usage: python tools/trace_report.py [BENCH_edge.trace.json] [--top 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def pct(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q / 100 * (len(xs) - 1))))
+    return xs[i]
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def complete_events(trace: dict):
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "X":
+            yield ev
+
+
+def phase_table(trace: dict) -> list:
+    """[(clock, name, count, p50, p95, max)] — wall rows in us, sim in s."""
+    by_name = defaultdict(list)
+    for ev in complete_events(trace):
+        clock = "wall" if ev.get("pid") == 1 else "sim"
+        by_name[(clock, ev["name"])].append(float(ev.get("dur", 0.0)))
+    rows = []
+    for (clock, name), durs in sorted(by_name.items()):
+        scale = 1.0 if clock == "wall" else 1e-6  # sim ts are s * 1e6
+        rows.append(
+            (
+                clock,
+                name,
+                len(durs),
+                pct(durs, 50) * scale,
+                pct(durs, 95) * scale,
+                max(durs) * scale,
+            )
+        )
+    return rows
+
+
+def straggler_table(trace: dict, top: int) -> list:
+    """Slowest worker lanes by total phase2.compute sim time."""
+    compute = defaultdict(float)
+    respond = defaultdict(list)
+    for ev in complete_events(trace):
+        if ev.get("pid") != 2:
+            continue
+        lane = ev.get("tid")
+        if ev["name"] == "phase2.compute":
+            compute[lane] += float(ev.get("dur", 0.0)) * 1e-6
+        elif ev["name"] == "phase3.respond":
+            respond[lane].append(float(ev.get("dur", 0.0)) * 1e-6)
+    lanes = sorted(compute, key=lambda w: -compute[w])[:top]
+    names = thread_names(trace)
+    return [
+        (
+            names.get((2, w), str(w)),
+            compute[w],
+            sum(respond[w]) / len(respond[w]) if respond[w] else 0.0,
+        )
+        for w in lanes
+    ]
+
+
+def thread_names(trace: dict) -> dict:
+    out = {}
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            out[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    return out
+
+
+def cache_lines(trace: dict) -> list:
+    metrics = trace.get("repro_metrics", {})
+    lines = []
+    for probe, info in sorted(metrics.get("probes", {}).items()):
+        if not isinstance(info, dict) or "error" in info:
+            lines.append(f"  {probe}: unavailable ({info!r})")
+            continue
+        hits = info.get("hits", 0)
+        misses = info.get("misses", 0)
+        total = hits + misses
+        rate = hits / total if total else 0.0
+        extra = {
+            k: v for k, v in info.items() if k not in ("hits", "misses")
+        }
+        lines.append(
+            f"  {probe}: {hits}/{total} hits ({rate:.1%})"
+            + (f"  {extra}" if extra else "")
+        )
+    for name, val in sorted(metrics.get("counters", {}).items()):
+        lines.append(f"  counter {name}: {val}")
+    for name, val in sorted(metrics.get("gauges", {}).items()):
+        lines.append(f"  gauge {name}: {val:g}")
+    return lines
+
+
+def byte_lines(trace: dict) -> list:
+    """Wire-byte attributes carried on replay/pipeline spans."""
+    lines = []
+    for ev in complete_events(trace):
+        args = ev.get("args", {})
+        for key in sorted(args):
+            if "bytes" in key:
+                lines.append(f"  {ev['name']}: {key}={args[key]}")
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "path",
+        nargs="?",
+        default=os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_edge.trace.json",
+        ),
+    )
+    ap.add_argument("--top", type=int, default=8, help="straggler lanes shown")
+    args = ap.parse_args()
+    if not os.path.exists(args.path):
+        print(
+            f"{args.path}: not found (run `make bench-edge TRACE=1` first)",
+            file=sys.stderr,
+        )
+        return 1
+    trace = load(args.path)
+    n = sum(1 for _ in complete_events(trace))
+    print(f"{args.path}: {len(trace.get('traceEvents', []))} events ({n} spans)")
+    if trace.get("repro_dropped_events"):
+        print(f"  WARNING: {trace['repro_dropped_events']} events dropped at cap")
+
+    print("\nper-phase durations (wall in us, sim in simulated s):")
+    print(f"  {'clock':<5} {'span':<34} {'count':>6} {'p50':>10} {'p95':>10} {'max':>10}")
+    for clock, name, count, p50, p95, mx in phase_table(trace):
+        print(
+            f"  {clock:<5} {name:<34} {count:>6} {p50:>10.4g} {p95:>10.4g} {mx:>10.4g}"
+        )
+
+    stragglers = straggler_table(trace, args.top)
+    if stragglers:
+        print(f"\nstraggler attribution (top {len(stragglers)} lanes by compute):")
+        print(f"  {'lane':<12} {'compute_s':>10} {'respond_mean_s':>15}")
+        for lane, comp, resp in stragglers:
+            print(f"  {lane:<12} {comp:>10.4g} {resp:>15.4g}")
+
+    caches = cache_lines(trace)
+    if caches:
+        print("\ncaches and counters:")
+        for line in caches:
+            print(line)
+
+    bytes_ = byte_lines(trace)
+    if bytes_:
+        print("\nwire bytes:")
+        for line in bytes_[: args.top]:
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
