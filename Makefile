@@ -3,8 +3,8 @@
 
 PYTHON ?= python
 
-.PHONY: test test-fast bench bench-json bench-edge quickstart docs-check \
-	shim-check bench-diff trace-check
+.PHONY: test test-fast bench bench-json bench-edge bench-serve quickstart \
+	docs-check shim-check bench-diff trace-check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -25,6 +25,11 @@ bench-json:
 # Perfetto-loadable BENCH_edge.trace.json sidecar (report unchanged).
 bench-edge:
 	PYTHONPATH=src TRACE=$(TRACE) $(PYTHON) -m benchmarks.edge_runtime
+
+# Serving-engine load benchmark: continuous vs boundary batching under
+# open-loop Poisson arrivals; refreshes BENCH_serve.json at the repo root.
+bench-serve:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.serve_load
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -25,6 +25,7 @@ def main() -> None:
         protocol_batch,
         protocol_scaling,
         roofline,
+        serve_load,
     )
 
     modules = {
@@ -37,6 +38,7 @@ def main() -> None:
         "cmpc_comm": cmpc_comm,
         "edge_runtime": edge_runtime,
         "roofline": roofline,
+        "serve_load": serve_load,
     }
     if args.only:
         keep = set(args.only.split(","))

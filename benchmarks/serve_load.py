@@ -1,0 +1,240 @@
+"""Serving-engine load benchmark: continuous vs boundary batching under
+open-loop Poisson arrivals.
+
+The serving tier's claim is that admitting requests into *in-flight*
+pipeline replays (``mode="continuous"``: a launch fires as soon as
+fewer than ``pipe_depth`` replays remain in flight, so its Phase-1
+upload rides the tail replay's Phase-2/Phase-3 window) bounds tail
+latency against the classic batch-boundary server (``mode="boundary"``:
+every launch waits for the pipeline to drain).  This harness offers the
+SAME seeded request stream over the SAME worker-pool traces to both
+modes for each construction, so the comparison isolates the batching
+discipline:
+
+* ``load``      — open-loop Poisson arrivals per construction (AGE and
+                  PolyDot): sustained throughput and p50/p95/p99 sim
+                  latency per mode, every decode validated against the
+                  field oracle.  The emitted report asserts the win:
+                  continuous p95 < boundary p95 at equal-or-better
+                  throughput.
+* ``admission`` — the PoolEstimate-driven controller under pressure:
+                  a burst against a tight SLO (hopeless deadlines shed
+                  before launch), and an elastic pool shrinking below
+                  the construction's worker count (the remaining queue
+                  shed with reason ``"pool"``); exact shed/served/miss
+                  census on deterministic traces.
+
+Every latency in the report is simulated protocol time, so all leaves
+are deterministic per seed and ``tools/bench_diff.py`` diffs them
+exactly.  Emits ``BENCH_serve.json`` at the repo root
+(``make bench-serve``) plus a CSV under results/bench/.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.constructions import PlanConfig
+from repro.core.gf import Field
+from repro.runtime.pool import ShiftedExponential, sample_trace
+from repro.serve import SHED, ServingEngine
+
+from .common import repo_root, write_csv
+
+JSON_NAME = "BENCH_serve.json"
+
+CONSTRUCTIONS = {
+    "age": PlanConfig("age", 2, 2, 2),
+    "polydot": PlanConfig("polydot", 2, 2, 2),
+}
+
+# Open-loop stream: request shape, offered rate, and the (generous) SLO
+# for the load section — latency is the measurement there, not shedding.
+N_REQUESTS = 40
+ROWS, K_DIM, OUT = 4, 16, 8
+RATE = 0.6  # offered requests per simulated second
+SLO = 30.0
+PIPE_DEPTH = 2
+MAX_BATCH = 8
+N_TRACES = 64
+
+# Service-dominant pool: compute stretches past the network share, so
+# there is real Phase-2/3 window for continuous mode's uploads to hide in.
+LATENCY = ShiftedExponential(shift=0.1, scale=0.5)
+NET_SCALE = 0.3
+
+
+def _traces(pool: int, seed0: int):
+    return [
+        sample_trace(pool, LATENCY, seed=seed0 + i, net_scale=NET_SCALE)
+        for i in range(N_TRACES)
+    ]
+
+
+def _run_mode(w, traces, cfg, mode, xs, arrivals, field) -> dict:
+    eng = ServingEngine(
+        w, traces, cfg, field=field, mode=mode, pipe_depth=PIPE_DEPTH,
+        max_batch=MAX_BATCH, slo=SLO, validate=True, seed=0,
+    )
+    for x, t in zip(xs, arrivals):
+        eng.submit(x, float(t))
+    s = eng.run().summary()
+    s["oracle_validated"] = True
+    return s
+
+
+def _load_report(field) -> tuple:
+    out = {
+        "requests": N_REQUESTS,
+        "rows": ROWS, "k": K_DIM, "out": OUT,
+        "rate": RATE,
+        "pipe_depth": PIPE_DEPTH,
+        "max_batch": MAX_BATCH,
+    }
+    rows = []
+    for name, cfg in CONSTRUCTIONS.items():
+        # per-construction stream seed, identical across the two modes
+        rng = np.random.default_rng([13, sorted(CONSTRUCTIONS).index(name)])
+        w = rng.normal(size=(K_DIM, OUT)) * 0.5
+        xs = rng.normal(size=(N_REQUESTS, ROWS, K_DIM))
+        arrivals = np.cumsum(rng.exponential(1.0 / RATE, N_REQUESTS))
+        pool = cfg.n_workers + 4
+        traces = _traces(pool, seed0=9000)
+        per_mode = {
+            mode: _run_mode(w, traces, cfg, mode, xs, arrivals, field)
+            for mode in ("continuous", "boundary")
+        }
+        cont, bound = per_mode["continuous"], per_mode["boundary"]
+        if not cont["p95_latency"] < bound["p95_latency"]:
+            raise AssertionError(
+                f"{name}: continuous p95 {cont['p95_latency']} not below "
+                f"boundary {bound['p95_latency']}"
+            )
+        if cont["throughput"] < 0.99 * bound["throughput"]:
+            raise AssertionError(
+                f"{name}: continuous throughput {cont['throughput']} fell "
+                f"below boundary {bound['throughput']}"
+            )
+        per_mode["pool_size"] = pool
+        per_mode["p95_improvement"] = round(
+            bound["p95_latency"] / cont["p95_latency"], 4
+        )
+        per_mode["throughput_ratio"] = round(
+            cont["throughput"] / bound["throughput"], 4
+        )
+        out[name] = per_mode
+        for mode in ("continuous", "boundary"):
+            s = per_mode[mode]
+            rows.append(
+                {
+                    "construction": name,
+                    "mode": mode,
+                    "throughput": s["throughput"],
+                    "p50_latency": s["p50_latency"],
+                    "p95_latency": s["p95_latency"],
+                    "p99_latency": s["p99_latency"],
+                    "replays": s["replays"],
+                }
+            )
+    return out, rows
+
+
+def _shed_census(requests) -> dict:
+    reasons = {}
+    for r in requests:
+        if r.state == SHED:
+            reasons[r.shed_reason] = reasons.get(r.shed_reason, 0) + 1
+    return reasons
+
+
+def _admission_report(field) -> dict:
+    """The admission controller under pressure, exact census per path."""
+    cfg = PlanConfig("age", 2, 2, 1)
+    rng = np.random.default_rng(29)
+    w = rng.normal(size=(K_DIM, OUT)) * 0.5
+    xs = rng.normal(size=(24, ROWS, K_DIM))
+
+    # -- hopeless deadlines: a burst against a tight SLO ----------------
+    pool = cfg.n_workers + 2
+    eng = ServingEngine(
+        w, _traces(pool, seed0=11000), cfg, field=field, slo=2.5,
+        validate=True, seed=0,
+    )
+    for i, x in enumerate(xs):
+        eng.submit(x, 0.05 * i)  # burst: far above the pool's service rate
+    rep = eng.run()
+    s = rep.summary()
+    burst = {
+        "slo": 2.5,
+        "submitted": s["requests"],
+        "served": s["served"],
+        "shed": _shed_census(rep.requests),
+        "deadline_misses": s["deadline_misses"],
+        "replays": s["replays"],
+        "oracle_validated": True,
+    }
+
+    # -- pool shrinks below the construction --------------------------
+    big = sample_trace(pool, LATENCY, seed=12000, net_scale=NET_SCALE)
+    small = big.take(cfg.n_workers - 2)  # cannot seat age(2,2,1)
+    eng = ServingEngine(
+        w, [big, big] + [small] * 60, cfg, field=field, slo=None,
+        validate=True, seed=0,
+    )
+    for i, x in enumerate(xs):
+        eng.submit(x, 2.0 * i)  # slow drip: the shrink lands mid-stream
+    rep = eng.run()
+    s = rep.summary()
+    shrink = {
+        "pool_sizes": [pool, cfg.n_workers - 2],
+        "submitted": s["requests"],
+        "served": s["served"],
+        "shed": _shed_census(rep.requests),
+        "replays": s["replays"],
+        "oracle_validated": True,
+    }
+    if not shrink["shed"].get("pool"):
+        raise AssertionError("elastic shrink shed nothing with reason 'pool'")
+    return {"burst": burst, "elastic_shrink": shrink}
+
+
+def run():
+    field = Field()
+    load, rows = _load_report(field)
+    admission = _admission_report(field)
+    report = {
+        "bench": "serve_load",
+        "config": {
+            "constructions": {
+                name: cfg.label() for name, cfg in CONSTRUCTIONS.items()
+            },
+            "latency_model": "ShiftedExponential(0.1, 0.5)",
+            "net_scale": NET_SCALE,
+        },
+        "load": load,
+        "admission": admission,
+    }
+    csv_path = write_csv("serve_load", rows)
+    json_path = os.path.join(repo_root(), JSON_NAME)
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    age = load["age"]
+    return [
+        {
+            "name": "serve_load",
+            "us_per_call": 0.0,
+            "derived": f"csv={csv_path} json={json_path} "
+            f"age_p95_improvement={age['p95_improvement']} "
+            f"age_throughput_ratio={age['throughput_ratio']} "
+            f"polydot_p95_improvement={load['polydot']['p95_improvement']} "
+            f"all_validated=True",
+        }
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

@@ -16,10 +16,14 @@ from repro.models import build_model
 
 
 def sample(logits, vocab, rng, temperature=0.8):
+    """Temperature sampling, vectorized over the batch: one inverse-CDF
+    draw per row instead of a per-row ``rng.choice`` loop."""
     logits = np.asarray(logits[:, -1, :vocab], np.float32) / temperature
     probs = np.exp(logits - logits.max(-1, keepdims=True))
     probs /= probs.sum(-1, keepdims=True)
-    return np.stack([rng.choice(vocab, p=p) for p in probs]).astype(np.int32)
+    cum = probs.cumsum(-1)
+    u = rng.random((probs.shape[0], 1)) * cum[:, -1:]
+    return np.minimum((cum < u).sum(-1), vocab - 1).astype(np.int32)
 
 
 def main():

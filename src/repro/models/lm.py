@@ -249,6 +249,29 @@ def decoder_prefill(cfg: ModelConfig, params, batch, caches):
     return logits, new_caches
 
 
+def decoder_hidden_step(cfg: ModelConfig, params, tokens, caches, positions):
+    """One decode step stopping at the final-normed hidden state
+    (``head_mode="none"``): tokens [B, 1] -> hidden [B, 1, d_model].
+
+    The private-inference split point: the public trunk runs on-device
+    up to here, and the lm-head matmul — the part multiplying the
+    *private* head matrix — routes through the CMPC serving engine
+    (``hidden @ head_matrix``) instead of the local ``_logits`` path.
+    """
+    hidden, new_caches, _ = decoder_forward(
+        cfg, params, {"tokens": tokens}, caches=caches, positions=positions,
+        head_mode="none",
+    )
+    return hidden, new_caches
+
+
+def head_matrix(cfg: ModelConfig, params) -> jnp.ndarray:
+    """The lm-head weight [d_model, vocab] with ``logit_scale`` folded
+    in, so ``hidden @ head_matrix(cfg, params)`` equals the full-head
+    logits — the private source-2 operand the serving engine holds."""
+    return _head(cfg, params) * jnp.asarray(cfg.logit_scale)
+
+
 # ----------------------------------------------------------------------
 # encoder-decoder (seamless-style backbone; modality frontend is a stub)
 # ----------------------------------------------------------------------

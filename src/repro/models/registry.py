@@ -32,6 +32,12 @@ class Model:
     decode_step: Callable
     cache_abstract: Callable
     prefill: Optional[Callable] = None  # (params, batch, caches) -> (last_logits, caches)
+    # Private-inference split (decoder families): one decode step that
+    # stops at the final-normed hidden state, plus the lm-head matrix
+    # (logit_scale folded in) — the serving engine multiplies the two
+    # under CMPC instead of running the local head.
+    hidden_step: Optional[Callable] = None  # (params, tok, caches, pos) -> (hidden, caches)
+    head_matrix: Optional[Callable] = None  # (params) -> [d_model, vocab]
 
     def init(self, rng: jax.Array) -> Dict[str, Any]:
         return materialize(self.abstract_params(), rng)
@@ -95,6 +101,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 cfg, batch, max_len
             ),
             prefill=lambda p, b, caches: lm.decoder_prefill(cfg, p, b, caches),
+            hidden_step=lambda p, tok, caches, pos: lm.decoder_hidden_step(
+                cfg, p, tok, caches, pos
+            ),
+            head_matrix=lambda p: lm.head_matrix(cfg, p),
         )
     if fam == "encdec":
 

@@ -34,6 +34,13 @@ setting: heterogeneous, flaky edge workers.
                    replay k+1's Phase-1 transfers overlap replay k's
                    Phase-2 compute; aggregate ``PipelineMetrics``
                    report makespan, occupancy, and Phase-1 overlap.
+                   The stateful core is ``PipelineSession``: replays
+                   are *appended* one at a time against the live
+                   occupancy (optionally floored by a request-arrival
+                   ``not_before``), which is what lets the serving
+                   tier (``repro.serve``) admit requests into an
+                   in-flight pipeline instead of waiting for batch
+                   boundaries.
 
 Traces can be link-resolved: ``NetworkModel`` implementations
 (``UniformLinks`` / ``AsymmetricLinks`` / ``ClusteredEdge``) sample a
@@ -71,6 +78,7 @@ from .scheduler import (  # noqa: F401
     BatchEdgeRun,
     DecodeFailure,
     EdgeRun,
+    HybridState,
     run_batch_over_pool,
     run_over_pool,
 )
@@ -85,7 +93,12 @@ from .metrics import (  # noqa: F401
     order_stat_mean,
     summarize,
 )
-from .pipeline import PipelineRun, run_pipeline_over_pool  # noqa: F401
+from .pipeline import (  # noqa: F401
+    PipelineReplay,
+    PipelineRun,
+    PipelineSession,
+    run_pipeline_over_pool,
+)
 from .autoplan import (  # noqa: F401
     AdaptiveRun,
     AutoPlanner,

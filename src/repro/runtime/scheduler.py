@@ -39,6 +39,12 @@ Corrupted responses — two strategies, picked by ``decode_mode``:
   until the clean responders run out.
 * ``"auto"``: ``"correct"`` when the resolved error budget is > 0,
   ``"detect"`` otherwise.
+* ``"hybrid"``: detect until the *first rejection on the pool*, then
+  escalate to BW correction for every later replay against it.  The
+  escalation is cross-replay state, so it lives in a
+  :class:`HybridState` the caller threads through its replay calls
+  (the serving engine keeps one per pool/session); a bare call with no
+  state behaves as a fresh pool — detect.
 
 ``verify_extras="auto"`` / ``error_budget="auto"`` resolve from the
 trace's *configured* fault model (``WorkerTrace.fault_model`` — what
@@ -551,15 +557,79 @@ def _resolve_error_budget(error_budget, trace: WorkerTrace, plan: CMPCPlan) -> i
 
 def _resolve_decode_mode(decode_mode: str, error_budget: int) -> str:
     """``"auto"`` -> ``"correct"`` iff the resolved error budget buys any
-    protection; explicit modes pass through (validated)."""
+    protection; explicit modes pass through (validated).  ``"hybrid"``
+    must already have been resolved against a :class:`HybridState`
+    (``_resolve_hybrid``) before reaching here."""
     if decode_mode == "auto":
         return "correct" if error_budget > 0 else "detect"
     if decode_mode not in ("detect", "correct"):
         raise ValueError(
-            f"decode_mode must be 'detect', 'correct', or 'auto', "
-            f"got {decode_mode!r}"
+            f"decode_mode must be 'detect', 'correct', 'auto', or "
+            f"'hybrid', got {decode_mode!r}"
         )
     return decode_mode
+
+
+@dataclasses.dataclass
+class HybridState:
+    """Cross-replay escalation state for ``decode_mode="hybrid"``.
+
+    Hybrid starts every pool in cheap detect mode (confirm-and-retry)
+    and escalates to Berlekamp-Welch correction only after the first
+    *evidence of corruption on this pool* — a rejected responder in a
+    detect decode.  The evidence outlives any single replay, so the
+    state is an explicit object the caller threads through consecutive
+    replays against the same pool (the serving engine keeps one per
+    session and resets it when the pool is reconfigured).  A call with
+    no state gets a fresh one: a single replay can never escalate
+    itself mid-flight, matching "escalate only *after* the first
+    rejection".
+    """
+
+    escalated: bool = False
+    rejections_seen: int = 0
+
+    def note(self, metrics: RunMetrics) -> None:
+        """Fold one finished replay's verdicts into the state."""
+        n_bad = int(metrics.rejected_ids.size) + int(
+            metrics.corrected_workers.size
+        )
+        if n_bad > 0:
+            self.rejections_seen += n_bad
+            self.escalated = True
+
+    def reset(self) -> None:
+        """Forget the pool (call after a reconfiguration)."""
+        self.escalated = False
+        self.rejections_seen = 0
+
+
+def _resolve_hybrid(
+    decode_mode: str,
+    hybrid_state: Optional[HybridState],
+    error_budget: int,
+    plan: CMPCPlan,
+) -> Tuple[str, int, Optional[HybridState]]:
+    """Resolve ``"hybrid"`` against the pool's escalation state.
+
+    Pre-escalation: plain detect with the caller's budget untouched.
+    Post-escalation: BW correction with a budget of at least 1 (the
+    auto-resolved budget is often 0 exactly when hybrid matters — the
+    master provisioned an honest pool and was wrong), capped at what
+    the pool can afford; a pool too small to fund any BW window stays
+    in detect.  Non-hybrid modes pass through so the callers can
+    resolve unconditionally.
+    """
+    if decode_mode != "hybrid":
+        return decode_mode, error_budget, hybrid_state
+    state = hybrid_state if hybrid_state is not None else HybridState()
+    if not state.escalated:
+        return "detect", error_budget, state
+    cap = (plan.n_total - plan.decode_threshold) // 2
+    budget = min(max(1, error_budget), cap)
+    if budget <= 0:
+        return "detect", error_budget, state
+    return "correct", budget, state
 
 
 def run_over_pool(
@@ -575,6 +645,7 @@ def run_over_pool(
     error_budget="auto",
     max_subset_tries: int = DEFAULT_SUBSET_TRIES,
     obs_attrs: Optional[dict] = None,
+    hybrid_state: Optional[HybridState] = None,
 ) -> EdgeRun:
     """Execute Y = A^T B over the simulated pool described by ``trace``.
 
@@ -583,8 +654,10 @@ def run_over_pool(
     confirmations, subset search bounded by ``max_subset_tries``),
     ``"correct"`` one Berlekamp-Welch decode over the fastest
     ``thr + 2 * error_budget`` responders, ``"auto"`` correct iff the
-    resolved error budget is positive.  ``error_budget="auto"`` resolves
-    from the trace's configured fault model.
+    resolved error budget is positive, ``"hybrid"`` detect until the
+    first rejection recorded in ``hybrid_state`` then correct.
+    ``error_budget="auto"`` resolves from the trace's configured fault
+    model.
 
     Returns the decoded product and the run's :class:`RunMetrics`.
     Raises :class:`DecodeFailure` when the surviving pool cannot serve
@@ -594,6 +667,9 @@ def run_over_pool(
     alive = _check_pool(plan, trace)
     verify_extras = _resolve_verify_extras(verify_extras, trace)
     error_budget = _resolve_error_budget(error_budget, trace, plan)
+    decode_mode, error_budget, hybrid_state = _resolve_hybrid(
+        decode_mode, hybrid_state, error_budget, plan
+    )
     decode_mode = _resolve_decode_mode(decode_mode, error_budget)
     rng = np.random.default_rng(seed)
 
@@ -612,7 +688,10 @@ def run_over_pool(
         max_subset_tries=max_subset_tries, obs_attrs=obs_attrs,
     )
     y = proto.assemble_y(plan, res.coeffs)
-    return EdgeRun(y=y, metrics=_build_metrics(plan, trace, alive, res))
+    metrics = _build_metrics(plan, trace, alive, res)
+    if hybrid_state is not None:
+        hybrid_state.note(metrics)
+    return EdgeRun(y=y, metrics=metrics)
 
 
 def _batched_compute_closure(
@@ -689,6 +768,7 @@ def run_batch_over_pool(
     error_budget="auto",
     max_subset_tries: int = DEFAULT_SUBSET_TRIES,
     obs_attrs: Optional[dict] = None,
+    hybrid_state: Optional[HybridState] = None,
 ) -> BatchEdgeRun:
     """Replay a whole batch of products through ONE worker trace.
 
@@ -719,6 +799,9 @@ def run_batch_over_pool(
     alive = _check_pool(plan, trace)
     verify_extras = _resolve_verify_extras(verify_extras, trace)
     error_budget = _resolve_error_budget(error_budget, trace, plan)
+    decode_mode, error_budget, hybrid_state = _resolve_hybrid(
+        decode_mode, hybrid_state, error_budget, plan
+    )
     decode_mode = _resolve_decode_mode(decode_mode, error_budget)
     rng = np.random.default_rng(seed)
 
@@ -741,6 +824,8 @@ def run_batch_over_pool(
     y = _unfold_batched_y(plan, res.coeffs, batch)
 
     aggregate = _build_metrics(plan, trace, alive, res, batch=batch)
+    if hybrid_state is not None:
+        hybrid_state.note(aggregate)
     # one replay served every product, so the per-product metrics are
     # identical by construction: build once, then give each entry its
     # own object (the subset id arrays stay shared read-only views)

@@ -20,6 +20,7 @@ from repro.runtime import (
     DecodeFailure,
     Deterministic,
     FaultSpec,
+    HybridState,
     run_batch_over_pool,
     run_over_pool,
     sample_trace,
@@ -29,6 +30,7 @@ from repro.runtime.scheduler import (
     DEFAULT_SUBSET_TRIES,
     _resolve_decode_mode,
     _resolve_error_budget,
+    _resolve_hybrid,
     _resolve_verify_extras,
 )
 
@@ -246,3 +248,100 @@ def test_max_subset_tries_bounds_detect_search(setup):
         run_over_pool(
             plan, a, b, trace, seed=3, verify_extras=1, max_subset_tries=0
         )
+
+
+# ----------------------------------------------------------------------
+# hybrid mode: detect until the first rejection, then escalate to BW
+# ----------------------------------------------------------------------
+def test_hybrid_resolution_unit(setup):
+    """The per-replay resolution: non-hybrid modes pass through, a fresh
+    hybrid state starts in detect, an escalated one runs correct with
+    the budget floored at 1 and capped by the pool's BW capacity."""
+    plan, _, _, _ = setup
+    assert _resolve_hybrid("detect", None, 2, plan) == ("detect", 2, None)
+    mode, budget, state = _resolve_hybrid("hybrid", None, 2, plan)
+    assert mode == "detect" and isinstance(state, HybridState)
+    assert not state.escalated
+    state.escalated = True
+    mode, budget, _ = _resolve_hybrid("hybrid", state, 2, plan)
+    assert mode == "correct" and budget == 2
+    # zero configured budget still corrects once escalated (floor 1)
+    assert _resolve_hybrid("hybrid", state, 0, plan)[:2] == ("correct", 1)
+    # and never beyond what the responder pool can seat
+    cap = (plan.n_total - plan.decode_threshold) // 2
+    assert _resolve_hybrid("hybrid", state, 99, plan)[1] == cap
+    state.reset()
+    assert not state.escalated and state.rejections_seen == 0
+
+
+def test_hybrid_escalates_after_first_rejection(setup):
+    """Clean replays stay on the cheap detect path; the first rejected
+    responder flips the shared state, and the next replay on the same
+    pool runs Berlekamp-Welch and names the corrupt worker."""
+    plan, a, b, want = setup
+    state = HybridState()
+    clean = _staircase_trace(plan, seed=20)
+    r1 = run_over_pool(
+        plan, a, b, clean, seed=3, decode_mode="hybrid", hybrid_state=state
+    )
+    assert np.array_equal(r1.y, want)
+    assert not state.escalated
+    assert r1.metrics.responder_ids.size == plan.decode_threshold
+    assert r1.metrics.corrected_workers.size == 0
+
+    corrupt = _staircase_trace(plan, corrupt_ids=[0], seed=21)
+    r2 = run_over_pool(
+        plan, a, b, corrupt, seed=3, decode_mode="hybrid",
+        hybrid_state=state, verify_extras=2,
+    )
+    assert np.array_equal(r2.y, want)
+    # this replay still ran detect (witnessed, rejected, retried) ...
+    assert r2.metrics.corrected_workers.size == 0
+    assert r2.metrics.rejected_ids.size > 0
+    # ... and the rejection armed the escalation
+    assert state.escalated and state.rejections_seen > 0
+
+    r3 = run_over_pool(
+        plan, a, b, corrupt, seed=3, decode_mode="hybrid",
+        hybrid_state=state, verify_extras=2,
+    )
+    assert np.array_equal(r3.y, want)
+    assert np.array_equal(r3.metrics.corrected_workers, np.array([0]))
+
+
+def test_hybrid_default_state_and_validation(setup):
+    """decode_mode="hybrid" without an explicit state still runs (a
+    throwaway state per call), and the mode name is accepted by the
+    resolver chain."""
+    plan, a, b, want = setup
+    clean = _staircase_trace(plan, seed=24)
+    run = run_over_pool(plan, a, b, clean, seed=3, decode_mode="hybrid")
+    assert np.array_equal(run.y, want)
+    with pytest.raises(ValueError, match="decode_mode"):
+        run_over_pool(plan, a, b, clean, seed=3, decode_mode="bogus")
+
+
+def test_hybrid_batched_threads_state(setup):
+    """The batched replay feeds the same shared state: a rejection in
+    one batch escalates the next batch to correction."""
+    plan, _, _, _ = setup
+    field = plan.field
+    rng = np.random.default_rng(22)
+    a = field.random(rng, (2, 8, 8))
+    b = field.random(rng, (2, 8, 4))
+    want = np.stack([field.matmul(x.T, y) for x, y in zip(a, b)])
+    state = HybridState()
+    corrupt = _staircase_trace(plan, corrupt_ids=[0], seed=23)
+    r1 = run_batch_over_pool(
+        plan, a, b, corrupt, seed=3, decode_mode="hybrid",
+        hybrid_state=state, verify_extras=2,
+    )
+    assert np.array_equal(r1.y, want)
+    assert state.escalated
+    assert r1.metrics.corrected_workers.size == 0
+    r2 = run_batch_over_pool(
+        plan, a, b, corrupt, seed=3, decode_mode="hybrid",
+        hybrid_state=state, verify_extras=2,
+    )
+    assert np.array_equal(r2.y, want)
+    assert np.array_equal(r2.metrics.corrected_workers, np.array([0]))

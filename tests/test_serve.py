@@ -1,0 +1,410 @@
+"""Serving tier: request lifecycle, continuous batching, SLO/admission
+semantics, and the async submission API under it.
+
+The engine is a pure function of (requests, traces, seed): every test
+below runs on deterministic traces and asserts exact censuses — decode
+values against the field oracle, deadline misses by count, shed reasons
+by name, replay folding by replay count.  The session/pipeline
+regression pins the refactor: ``PipelineSession`` appends must replay
+byte-identically to the historical ``run_pipeline_over_pool``.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.constructions import PlanConfig
+from repro.core.gf import Field
+from repro.core.layers import (
+    InlineExecutor,
+    PrivateLinear,
+    choose_scales,
+    secure_matmul,
+    secure_matmul_submit,
+)
+from repro.core.planner import BlockShapes, get_plan_for
+from repro.obs import TRACER
+from repro.runtime import (
+    Deterministic,
+    PipelineSession,
+    ShiftedExponential,
+    run_pipeline_over_pool,
+    sample_trace,
+)
+from repro.serve import DONE, SHED, ServingEngine
+
+FIELD = Field()
+CFG = PlanConfig("age", 2, 2, 1)
+POOL = CFG.n_workers + 2
+K_DIM, OUT, ROWS = 16, 8, 4
+
+
+def _traces(n, pool=POOL, seed0=100, latency=None, net_scale=0.3):
+    latency = latency or ShiftedExponential(shift=0.1, scale=0.5)
+    return [
+        sample_trace(pool, latency, seed=seed0 + i, net_scale=net_scale)
+        for i in range(n)
+    ]
+
+
+def _engine(traces=None, **kw):
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(K_DIM, OUT))
+    eng = ServingEngine(
+        w,
+        traces if traces is not None else _traces(16),
+        kw.pop("config", CFG),
+        field=FIELD,
+        seed=0,
+        validate=True,
+        **kw,
+    )
+    return eng, w, rng
+
+
+def _exact_y(x, w):
+    """The engine's fixed-point answer, from first principles."""
+    s = choose_scales(
+        K_DIM, float(np.abs(x).max() + 1e-9), float(np.abs(w).max() + 1e-9),
+        FIELD.p,
+    )
+    yq = FIELD.matmul(FIELD.encode(x.T, s).T, FIELD.encode(w, s))
+    return FIELD.decode(yq, s * s)
+
+
+# ----------------------------------------------------------------------
+# request lifecycle and decode exactness
+# ----------------------------------------------------------------------
+def test_served_requests_decode_exactly():
+    """Every served request's y equals the fixed-point oracle computed
+    outside the engine — per-request scales survive the batch fold."""
+    eng, w, rng = _engine()
+    xs = [rng.normal(size=(ROWS, K_DIM)) * mag for mag in (0.1, 1.0, 30.0)]
+    reqs = [eng.submit(x, 0.2 * i) for i, x in enumerate(xs)]
+    rep = eng.run()
+    assert all(r.state == DONE for r in reqs)
+    for x, r in zip(xs, reqs):
+        assert np.array_equal(r.y, _exact_y(x, w))
+        assert r.completion > r.launch >= r.arrival
+    s = rep.summary()
+    assert s["served"] == 3 and s["shed"] == 0
+    assert s["p99_latency"] >= s["p95_latency"] >= s["p50_latency"] > 0
+
+
+def test_submit_validation():
+    eng, w, rng = _engine()
+    with pytest.raises(ValueError, match="rows"):
+        eng.submit(rng.normal(size=(3, K_DIM)), 0.0)  # t=2 does not divide 3
+    eng.submit(rng.normal(size=(ROWS, K_DIM)), 0.0)
+    with pytest.raises(ValueError, match="rows"):
+        eng.submit(rng.normal(size=(ROWS + 2, K_DIM)), 0.0)  # != first
+    with pytest.raises(ValueError, match="k="):
+        eng.submit(rng.normal(size=(ROWS, K_DIM + 1)), 0.0)
+    with pytest.raises(ValueError, match="mode"):
+        ServingEngine(w, _traces(1), CFG, mode="batchy")
+    with pytest.raises(ValueError, match="pipe_depth"):
+        ServingEngine(w, _traces(1), CFG, pipe_depth=1)
+
+
+# ----------------------------------------------------------------------
+# SLO accounting: exact deadline-miss census on deterministic traces
+# ----------------------------------------------------------------------
+def test_exact_deadline_census_on_deterministic_trace():
+    """Two identical engines: the first learns the (deterministic)
+    completion time, the second gets deadlines straddling it — the miss
+    census must split exactly there, with no shedding (no estimator
+    history on the first launch: admission is optimistic)."""
+    det = _traces(4, latency=Deterministic(1.0), net_scale=0.1)
+    probe, _, rng = _engine(traces=det)
+    x = rng.normal(size=(ROWS, K_DIM))
+    c = probe.submit(x, 0.0)
+    probe.run()
+    completion = c.completion
+    assert completion > 0
+
+    eng, _, _ = _engine(traces=det)
+    hit = eng.submit(x, 0.0, deadline=completion + 0.5)
+    miss = eng.submit(x, 0.0, deadline=completion - 0.5)
+    exact = eng.submit(x, 0.0, deadline=completion)  # boundary: met
+    rep = eng.run()
+    # all three rode the same replay, same deterministic completion
+    assert {r.completion for r in (hit, miss, exact)} == {completion}
+    assert hit.met_deadline and exact.met_deadline
+    assert not miss.met_deadline
+    assert rep.summary()["deadline_misses"] == 1
+    assert rep.summary()["served"] == 3
+
+
+def test_admission_sheds_hopeless_deadlines():
+    """A burst against a tight SLO: once the estimator has one
+    observation, requests whose deadline the prediction rules out are
+    shed with reason 'deadline' before any launch is wasted on them."""
+    eng, _, rng = _engine(slo=2.0)
+    reqs = [eng.submit(rng.normal(size=(ROWS, K_DIM)), 0.05 * i)
+            for i in range(12)]
+    rep = eng.run()
+    shed = [r for r in reqs if r.state == SHED]
+    assert shed and all(r.shed_reason == "deadline" for r in shed)
+    assert all(r.y is None and math.isnan(r.completion) for r in shed)
+    served = [r for r in reqs if r.state == DONE]
+    assert served  # the first wave launches before any prediction exists
+    assert rep.summary()["shed"] == len(shed)
+
+
+def test_drained_queue_leaves_no_orphans():
+    """After run(), every submitted request is terminal (done or shed)
+    and the internal queue is empty — nothing in flight, nothing lost."""
+    eng, _, rng = _engine(slo=2.5)
+    reqs = [eng.submit(rng.normal(size=(ROWS, K_DIM)), 0.1 * i)
+            for i in range(10)]
+    rep = eng.run()
+    assert eng._queue == []
+    assert all(r.state in (DONE, SHED) for r in reqs)
+    s = rep.summary()
+    assert s["served"] + s["shed"] == s["requests"] == 10
+
+
+def test_pool_shrink_sheds_remaining_queue():
+    """When the trace source shrinks below the construction's worker
+    count, nothing the engine launches can complete: the remaining
+    queue is shed with reason 'pool', earlier requests stay served."""
+    big = sample_trace(POOL, ShiftedExponential(0.1, 0.5), seed=7,
+                       net_scale=0.3)
+    small = big.take(CFG.n_workers - 2)
+    eng, _, rng = _engine(traces=[big, big] + [small] * 20)
+    reqs = [eng.submit(rng.normal(size=(ROWS, K_DIM)), 3.0 * i)
+            for i in range(8)]
+    eng.run()
+    served = [r for r in reqs if r.state == DONE]
+    shed = [r for r in reqs if r.state == SHED]
+    assert served and shed
+    assert all(r.shed_reason == "pool" for r in shed)
+    # served requests all predate the shrink
+    assert max(r.arrival for r in served) < min(r.arrival for r in shed)
+
+
+def test_degraded_estimates_halve_admission_cap(monkeypatch):
+    """When pool-health estimates disagree (degraded), the admission
+    cap halves: the same 4-request wave folds into one replay normally
+    but two replays under degradation (deferred, not shed)."""
+    det = _traces(8, latency=Deterministic(1.0), net_scale=0.1)
+    base, _, rng = _engine(traces=det, max_batch=4)
+    xs = [rng.normal(size=(ROWS, K_DIM)) for _ in range(4)]
+    for x in xs:
+        base.submit(x, 0.0)
+    assert base.run().summary()["replays"] == 1
+
+    eng, _, _ = _engine(traces=det, max_batch=4)
+    monkeypatch.setattr(eng, "_predicted_service", lambda: (0.5, True))
+    reqs = [eng.submit(x, 0.0) for x in xs]
+    rep = eng.run()
+    assert all(r.state == DONE for r in reqs)  # deferred != shed
+    assert rep.summary()["replays"] == 2
+
+
+# ----------------------------------------------------------------------
+# continuous vs boundary batching
+# ----------------------------------------------------------------------
+def test_continuous_beats_boundary_p95_on_identical_stream():
+    """Same requests, same traces, same seed: admitting into in-flight
+    replays must cut tail latency without losing a single request."""
+    rng = np.random.default_rng(3)
+    xs = rng.normal(size=(24, ROWS, K_DIM))
+    arrivals = np.cumsum(rng.exponential(1.4, 24))
+    stats = {}
+    for mode in ("continuous", "boundary"):
+        eng, _, _ = _engine(traces=_traces(32), mode=mode)
+        for x, t in zip(xs, arrivals):
+            eng.submit(x, float(t))
+        stats[mode] = eng.run().summary()
+    assert stats["continuous"]["served"] == stats["boundary"]["served"] == 24
+    assert (
+        stats["continuous"]["p95_latency"]
+        < stats["boundary"]["p95_latency"]
+    )
+    assert (
+        stats["continuous"]["throughput"]
+        >= 0.99 * stats["boundary"]["throughput"]
+    )
+
+
+def test_ready_at_boundary_vs_continuous():
+    """ready_at(1) waits for the pipeline to drain; ready_at(2) only
+    needs the master uplink free — strictly earlier while a replay is
+    still in its Phase-2/3 window."""
+    plan = get_plan_for(
+        PlanConfig("age", 2, 2, 1, n_spare=2),
+        BlockShapes(k=8, ma=4, mb=4, s=2, t=2),
+        field=FIELD,
+    )
+    sess = PipelineSession(plan, seed=0, base_time=1.5)
+    assert sess.ready_at(1) == sess.ready_at(2) == 1.5
+    rng = np.random.default_rng(0)
+    a = FIELD.random(rng, (1, 8, 4))
+    b = FIELD.random(rng, (1, 8, 4))
+    trace = _traces(1, pool=plan.n_total)[0]
+    rep = sess.append(a, b, trace, not_before=2.0)
+    assert rep.start >= 2.0
+    assert sess.ready_at(1) == rep.completion
+    assert sess.ready_at(2) < rep.completion  # uplink frees mid-flight
+    with pytest.raises(ValueError, match="pipe_depth"):
+        sess.ready_at(0)
+
+
+def test_session_matches_run_pipeline_over_pool():
+    """Refactor regression: K appends on a fresh session replay
+    byte-identically to the one-shot pipeline entry point."""
+    plan = get_plan_for(
+        PlanConfig("age", 2, 2, 1, n_spare=2),
+        BlockShapes(k=8, ma=4, mb=4, s=2, t=2),
+        field=FIELD,
+    )
+    K, batch = 3, 2
+    rng = np.random.default_rng(5)
+    a = FIELD.random(rng, (K, batch, 8, 4))
+    b = FIELD.random(rng, (K, batch, 8, 4))
+    traces = _traces(K, pool=plan.n_total, seed0=50)
+    ref = run_pipeline_over_pool(plan, a, b, traces, seed=9)
+    sess = PipelineSession(plan, seed=9)
+    reps = [sess.append(a[k], b[k], traces[k]) for k in range(K)]
+    run = sess.result()
+    assert np.array_equal(run.y, ref.y)
+    assert run.metrics.makespan == ref.metrics.makespan
+    assert run.metrics.occupancy == ref.metrics.occupancy
+    for rm, rm_ref in zip(run.replay_metrics, ref.replay_metrics):
+        assert rm.completion_time == rm_ref.completion_time
+    assert [r.completion for r in reps] == [
+        m.completion_time for m in ref.replay_metrics
+    ]
+
+
+# ----------------------------------------------------------------------
+# hybrid Byzantine posture through the engine
+# ----------------------------------------------------------------------
+def test_engine_hybrid_escalates_and_corrects():
+    """A persistently corrupt fastest worker: the first replay rejects
+    it on the detect path, later replays run Berlekamp-Welch — and
+    validate=True proves every decode against the oracle either way."""
+    cfg = PlanConfig("age", 2, 2, 2)
+    pool = cfg.n_workers + 6
+    trace = sample_trace(pool, Deterministic(1.0), seed=2)
+    trace = dataclasses.replace(
+        trace, uplink_delay=0.1 + 0.01 * np.arange(pool)
+    )
+    trace = trace.with_faults(corrupt_ids=[0])
+    eng, w, rng = _engine(
+        traces=[trace], config=cfg, decode_mode="hybrid", verify_extras=2
+    )
+    reqs = [eng.submit(rng.normal(size=(ROWS, K_DIM)), 8.0 * i)
+            for i in range(3)]
+    rep = eng.run()
+    assert all(r.state == DONE for r in reqs)
+    assert rep.summary()["replays"] >= 2
+    state = eng._session.hybrid_state
+    assert state is not None and state.escalated
+    # first replay runs the detect path (rejects, corrects nothing);
+    # post-escalation replays BW-correct the corrupt worker instead.
+    assert eng._obs[0].n_corrected == 0
+    assert any(o.n_corrected for o in eng._obs[1:])
+    for r in reqs:
+        assert np.array_equal(r.y, _exact_y(r.x, w))
+
+
+# ----------------------------------------------------------------------
+# observability: request lanes in the trace
+# ----------------------------------------------------------------------
+def test_serve_spans_link_queue_to_replay():
+    """Each served request contributes a serve.queue and a serve.service
+    sim span on its own ("request", rid) lane, service bounds matching
+    the replay it rode; shed requests contribute a serve.shed instant."""
+    TRACER.clear()
+    TRACER.enable()
+    try:
+        eng, _, rng = _engine(slo=2.0)
+        reqs = [eng.submit(rng.normal(size=(ROWS, K_DIM)), 0.05 * i)
+                for i in range(8)]
+        eng.run()
+    finally:
+        TRACER.disable()
+    sim = TRACER.sim_events()
+    TRACER.clear()
+    by_name = {}
+    for e in sim:
+        by_name.setdefault(e["name"], []).append(e)
+    served = [r for r in reqs if r.state == DONE]
+    shed = [r for r in reqs if r.state == SHED]
+    assert len(by_name.get("serve.service", [])) == len(served)
+    assert len(by_name.get("serve.queue", [])) == len(served)
+    assert len(by_name.get("serve.shed", [])) == len(shed)
+    replays = {e["attrs"]["replay"] for e in by_name.get("replay", [])} or None
+    for r in served:
+        svc = next(
+            e for e in by_name["serve.service"]
+            if e["track"] == ("request", r.rid)
+        )
+        assert svc["t0"] == r.launch and svc["t1"] == r.completion
+        q = next(
+            e for e in by_name["serve.queue"]
+            if e["track"] == ("request", r.rid)
+        )
+        assert q["t0"] == r.arrival and q["t1"] == r.launch
+        assert svc["attrs"]["replay"] == r.replay
+
+
+# ----------------------------------------------------------------------
+# the async submission API under the engine
+# ----------------------------------------------------------------------
+def test_submit_handle_matches_sync_secure_matmul():
+    """handle.result() is exactly secure_matmul's answer: the field
+    computation is scale-deterministic, so the async path cannot drift."""
+    rng = np.random.default_rng(11)
+    a = rng.normal(size=(8, 6))
+    b = rng.normal(size=(8, 4))
+    h = secure_matmul_submit(a, b, s=2, t=2, z=1)
+    assert not h.done()
+    res = h.result()  # implicit flush
+    assert h.done()
+    want = secure_matmul(a, b, s=2, t=2, z=1)
+    assert np.array_equal(res.y, want.y)
+
+
+def test_executor_folds_submissions_into_one_flush():
+    """Same-signature submissions share one batched protocol run; the
+    per-request scales still decode each product exactly."""
+    ex = InlineExecutor(field=FIELD, seed=3)
+    rng = np.random.default_rng(12)
+    pairs = [
+        (rng.normal(size=(8, 6)) * mag, rng.normal(size=(8, 4)))
+        for mag in (0.1, 10.0)
+    ]
+    handles = [secure_matmul_submit(a, b, executor=ex) for a, b in pairs]
+    assert ex.pending() == 2 and ex.flushes == 0
+    ex.flush()
+    assert ex.flushes == 1 and ex.pending() == 0
+    for (a, b), h in zip(pairs, handles):
+        assert h.done()
+        assert np.array_equal(h.result().y, secure_matmul(a, b).y)
+    with pytest.raises(ValueError, match="field"):
+        secure_matmul_submit(
+            pairs[0][0], pairs[0][1], executor=ex,
+            field=Field(p=2**31 - 1),
+        )
+
+
+def test_private_linear_submit_path_matches_call():
+    """PrivateLinear with an executor: submit + flush + result is
+    bit-identical to the historical per-block protocol.run path."""
+    rng = np.random.default_rng(13)
+    w = rng.normal(size=(16, 6))
+    x = rng.normal(size=(4, 16))
+    plain = PrivateLinear(w, blocks=2, field=FIELD)(x)
+    ex = InlineExecutor(field=FIELD)
+    layer = PrivateLinear(w, blocks=2, field=FIELD, executor=ex)
+    h = layer.submit(x)
+    assert not h.done()
+    ex.flush()
+    assert h.done()
+    assert np.array_equal(h.result(), plain)
+    # the sync facade drives the same path
+    assert np.array_equal(layer(x), plain)

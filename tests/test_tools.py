@@ -78,6 +78,8 @@ def test_flatten_paths():
 def test_leaf_classification():
     assert bench_diff.is_wallclock("kernel.total_us")
     assert bench_diff.is_wallclock("batched.us_per_product[3]")
+    # the marker may sit on a parent key: phases_us.* are timings
+    assert bench_diff.is_wallclock("phases_us.reduce")
     assert bench_diff.is_ratio("pipelined.age.speedup")
     assert not bench_diff.is_wallclock("scheme.n_workers")
     assert not bench_diff.is_ratio("scheme.n_workers")

@@ -30,7 +30,7 @@ import os
 import subprocess
 import sys
 
-DEFAULT_FILES = ("BENCH_protocol.json", "BENCH_edge.json")
+DEFAULT_FILES = ("BENCH_protocol.json", "BENCH_edge.json", "BENCH_serve.json")
 
 # Required top-level sections per benchmark file.  A regenerated JSON
 # missing one of these means a report section silently fell out of the
@@ -45,6 +45,7 @@ KNOWN_SCHEMA = {
         "adaptive", "byzantine", "batched_replay", "sharded_batched",
         "subset_cache",
     ),
+    "BENCH_serve.json": ("bench", "config", "load", "admission"),
 }
 
 # Leaf-key fragments measured in host microseconds (machine-dependent).
@@ -72,8 +73,14 @@ def leaf_key(path: str) -> str:
 
 
 def is_wallclock(path: str) -> bool:
-    k = leaf_key(path)
-    return any(m in k for m in WALLCLOCK_MARKERS)
+    """Any path component carrying a microsecond marker makes the leaf
+    wall-clock: ``phases_us.reduce`` is a timing even though the leaf
+    key is just the phase name."""
+    return any(
+        m in part
+        for part in path.split(".")
+        for m in WALLCLOCK_MARKERS
+    )
 
 
 def is_ratio(path: str) -> bool:

@@ -100,6 +100,35 @@ def thread_names(trace: dict) -> dict:
     return out
 
 
+def serving_table(trace: dict) -> dict:
+    """Queueing-vs-protocol attribution from the serving tier's request
+    lanes: every served request carries a ``serve.queue`` span
+    (arrival -> launch) and a ``serve.service`` span (launch ->
+    completion, the protocol replay it rode), so the split says whether
+    latency went to waiting for admission or to the protocol itself."""
+    queue, service = [], []
+    shed = 0
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "X" and ev["name"] == "serve.queue":
+            queue.append(float(ev.get("dur", 0.0)) * 1e-6)
+        elif ev.get("ph") == "X" and ev["name"] == "serve.service":
+            service.append(float(ev.get("dur", 0.0)) * 1e-6)
+        elif ev.get("ph") == "i" and ev.get("name") == "serve.shed":
+            shed += 1
+    if not (queue or service or shed):
+        return {}
+    q_tot, s_tot = sum(queue), sum(service)
+    return {
+        "requests": len(service),
+        "shed": shed,
+        "queue_total_s": q_tot,
+        "queue_mean_s": q_tot / len(queue) if queue else 0.0,
+        "service_total_s": s_tot,
+        "service_mean_s": s_tot / len(service) if service else 0.0,
+        "queueing_fraction": q_tot / (q_tot + s_tot) if q_tot + s_tot else 0.0,
+    }
+
+
 def cache_lines(trace: dict) -> list:
     metrics = trace.get("repro_metrics", {})
     lines = []
@@ -173,6 +202,18 @@ def main() -> int:
         print(f"  {'lane':<12} {'compute_s':>10} {'respond_mean_s':>15}")
         for lane, comp, resp in stragglers:
             print(f"  {lane:<12} {comp:>10.4g} {resp:>15.4g}")
+
+    serving = serving_table(trace)
+    if serving:
+        print("\nserving attribution (sim s):")
+        print(
+            f"  {serving['requests']} requests served, {serving['shed']} shed; "
+            f"queueing {serving['queue_total_s']:.4g}s "
+            f"(mean {serving['queue_mean_s']:.4g}) vs protocol "
+            f"{serving['service_total_s']:.4g}s "
+            f"(mean {serving['service_mean_s']:.4g}) — "
+            f"{serving['queueing_fraction']:.1%} of latency is queueing"
+        )
 
     caches = cache_lines(trace)
     if caches:
