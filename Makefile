@@ -4,7 +4,7 @@
 PYTHON ?= python
 
 .PHONY: test test-fast bench bench-json bench-edge bench-serve quickstart \
-	docs-check shim-check bench-diff trace-check
+	docs-check shim-check bench-diff trace-check fuzz-kernels
 
 test:
 	$(PYTHON) -m pytest -q
@@ -47,6 +47,15 @@ shim-check:
 # snapshots (deterministic leaves exact, wall-clock within a band).
 bench-diff:
 	$(PYTHON) tools/bench_diff.py
+
+# Differential fuzz of the GF(p) matmul backends (f32limb / int32 /
+# both Pallas kernels in interpret mode / CRT) against the
+# arbitrary-precision host oracle.  Fixed seed = reproducible CI gate;
+# raise FUZZ_EXAMPLES locally for a longer hunt.
+FUZZ_EXAMPLES ?= 24
+FUZZ_SEED ?= 0
+fuzz-kernels:
+	$(PYTHON) tools/fuzz_kernels.py --examples $(FUZZ_EXAMPLES) --seed $(FUZZ_SEED) -q
 
 # Generate a small trace end-to-end (replay + adaptive decision) and
 # verify the Chrome/Perfetto export: schema-valid, all three protocol

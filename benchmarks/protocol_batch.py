@@ -31,6 +31,14 @@ PRs can track the perf trajectory:
                         against ``run_batched``.  Runs in a subprocess
                         so ``--xla_force_host_platform_device_count``
                         cannot perturb the main single-device numbers.
+* ``int_backends``   — the native-integer kernel tier: deep-K
+                        ``mod_matmul`` sweep (f32limb vs the int32
+                        uint32-accumulator path, bit-validated per
+                        shape), the dual-prime CRT protocol route, and
+                        fused in-kernel blinding vs materialized masks
+                        through ``run_batched`` — all on CPU, where the
+                        int32 tier is the ``auto`` pick for deep
+                        contractions.
 """
 from __future__ import annotations
 
@@ -182,6 +190,107 @@ def _padding_report(plan) -> list:
     return out
 
 
+# Deep-K sweep for the int32 tier: [DEEPK_BATCH, 128, K] @ [DEEPK_BATCH,
+# K, 128] products, K straddling the single-chunk boundary (256) and
+# going deep enough that per-chunk f32 reductions dominate.
+DEEPK_BATCH = 4
+DEEPK_SWEEP = (256, 512, 1024, 2048, 4096)
+
+
+def _int_backends_report(plan, field, rng) -> dict:
+    """Timings + validation for the native-integer tier (CPU)."""
+    import jax.numpy as jnp
+
+    from repro.core.gf import P_DEFAULT
+    from repro.kernels.modmatmul.ops import mod_matmul
+
+    kernel_rows = []
+    for k in DEEPK_SWEEP:
+        a = jnp.asarray(field.random(rng, (DEEPK_BATCH, 128, k)), jnp.int32)
+        b = jnp.asarray(field.random(rng, (DEEPK_BATCH, k, 128)), jnp.int32)
+        y_f = np.asarray(mod_matmul(a, b, p=P_DEFAULT, backend="f32limb"))
+        y_i = np.asarray(mod_matmul(a, b, p=P_DEFAULT, backend="int32"))
+        if not np.array_equal(y_f, y_i):
+            raise AssertionError(f"int32 disagrees with f32limb at K={k}")
+        f32_us = timeit(
+            lambda: np.asarray(mod_matmul(a, b, p=P_DEFAULT, backend="f32limb")),
+            repeat=5,
+        )
+        i32_us = timeit(
+            lambda: np.asarray(mod_matmul(a, b, p=P_DEFAULT, backend="int32")),
+            repeat=5,
+        )
+        kernel_rows.append(
+            {
+                "k": k,
+                "batch": DEEPK_BATCH,
+                "f32limb_us": round(f32_us, 1),
+                "int32_us": round(i32_us, 1),
+                "speedup": round(f32_us / i32_us, 2),
+                "validated": True,
+            }
+        )
+
+    # dual-prime CRT protocol route vs one single-prime pass
+    m = plan.shapes.ma
+    batch = 8
+    a = field.random(rng, (batch, m, m))
+    b = field.random(rng, (batch, m, m))
+    single_us = (
+        timeit(lambda: np.asarray(proto.run_batched(plan, a, b, seed=0)[0]), repeat=3)
+        / batch
+    )
+    crt_plans = [
+        get_plan(plan.scheme, plan.shapes, field=Field(q), seed=17 * i)
+        for i, q in enumerate((65521, 65519))
+    ]
+    want = np.einsum("bki,bkj->bij", a, b) % (65521 * 65519)
+    y_crt, _ = proto.run_batched_crt(crt_plans, a, b, seed=0)
+    if not np.array_equal(y_crt, want):
+        raise AssertionError("CRT protocol route disagrees with the oracle")
+    crt_us = (
+        timeit(
+            lambda: np.asarray(proto.run_batched_crt(crt_plans, a, b, seed=0)[0]),
+            repeat=3,
+        )
+        / batch
+    )
+
+    # fused in-kernel blinding vs materialized masks (bit-identical Y)
+    y0, _ = proto.run_batched(plan, a, b, seed=0, fused_masks=False)
+    y1, _ = proto.run_batched(plan, a, b, seed=0, fused_masks=True)
+    if not np.array_equal(y0, y1):
+        raise AssertionError("fused-mask run_batched disagrees with unfused")
+    fused_us = (
+        timeit(
+            lambda: np.asarray(
+                proto.run_batched(plan, a, b, seed=0, fused_masks=True)[0]
+            ),
+            repeat=3,
+        )
+        / batch
+    )
+
+    deep = [r for r in kernel_rows if r["k"] >= 256]
+    return {
+        "deep_k_matmul": kernel_rows,
+        "int32_beats_f32limb_deep_k": any(r["speedup"] > 1.0 for r in deep),
+        "crt": {
+            "primes": [65521, 65519],
+            "batch": batch,
+            "single_prime_us_per_product": round(single_us, 1),
+            "crt_us_per_product": round(crt_us, 1),
+            "validated": True,
+        },
+        "fused_masks": {
+            "batch": batch,
+            "unfused_us_per_product": round(single_us, 1),
+            "fused_us_per_product": round(fused_us, 1),
+            "bit_identical": True,
+        },
+    }
+
+
 def run():
     field = Field()
     rng = np.random.default_rng(0)
@@ -243,6 +352,7 @@ def run():
         "phases_us": _phase_times(plan, a1, b1),
         "padding_waste": _padding_report(plan),
         "sharded_batched": _sharded_report(),
+        "int_backends": _int_backends_report(plan, field, rng),
     }
     json_path = os.path.join(repo_root(), JSON_NAME)
     with open(json_path, "w") as f:

@@ -47,6 +47,16 @@ LAZY_K = 128
 
 LIMB = 256  # limb base
 
+# Contraction-depth bound for the native-integer (uint32 accumulator)
+# matmul path.  Raw per-chunk limb dots are summed across chunks in
+# uint32 *without* intermediate reductions; the binding constraint is
+# the summed cross-limb dot: each CHUNK_K-deep chunk contributes at
+# most 2 * 256 * 255**2 = 33_292_800, and 129 chunks stay under 2**32
+# (129 * 33_292_800 = 4_294_771_200) while 130 would wrap.  The
+# same-depth hi/lo dots are a factor ~4 below their bound.
+INT32_ACC_CHUNKS = 129
+INT32_ACC_K = INT32_ACC_CHUNKS * CHUNK_K  # 33024
+
 
 @dataclasses.dataclass(frozen=True)
 class Field:
@@ -451,6 +461,253 @@ def mod_matmul_f32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.nd
 
     acc, _ = jax.lax.scan(body, acc0, xs)
     return finish(acc)
+
+
+# ----------------------------------------------------------------------
+# native-integer path: Barrett reduction in pure uint32
+# ----------------------------------------------------------------------
+def barrett_reduce_u32(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """x mod p for uint32 x (any value < 2**32), without 64-bit arithmetic.
+
+    Barrett with mu = floor(2**32 / p): the quotient estimate
+    q = floor(x * mu / 2**32) satisfies floor(x/p) - q in {0, 1}, so one
+    conditional subtract finishes the reduction.  The 64-bit product
+    x * mu is never formed — its high word is assembled from four 16-bit
+    limb products, each of which fits uint32:
+
+        x*mu = 2**32*xh*mh + 2**16*(xh*ml + xl*mh) + xl*ml
+        q    = xh*mh + (u >> 16) + (v >> 16)       (exact; see below)
+
+    with u = xh*ml + (xl*ml >> 16) and v = xl*mh + (u & 0xFFFF) — the
+    carries of the middle column folded in 16 bits at a time.  Every op
+    lowers to uint32 vector mul/shift/add, so the same code runs in jnp,
+    inside Pallas kernel bodies, and on integer-capable accelerators.
+    Requires 1 < p < 2**16 (so that q * p also stays in uint32).
+    """
+    if not 1 < p < (1 << 16):
+        raise ValueError(f"barrett_reduce_u32 requires 1 < p < 2**16, got {p}")
+    mu = (1 << 32) // p
+    mh = jnp.uint32(mu >> 16)
+    ml = jnp.uint32(mu & 0xFFFF)
+    x = x.astype(jnp.uint32)
+    xh = x >> jnp.uint32(16)
+    xl = x & jnp.uint32(0xFFFF)
+    t = xl * ml
+    u = xh * ml + (t >> jnp.uint32(16))
+    v = xl * mh + (u & jnp.uint32(0xFFFF))
+    q = xh * mh + (u >> jnp.uint32(16)) + (v >> jnp.uint32(16))
+    r = x - q * jnp.uint32(p)
+    return jnp.where(r >= jnp.uint32(p), r - jnp.uint32(p), r)
+
+
+def _barrett_recombine(hh, mid, ll, p: int) -> jnp.ndarray:
+    """Recombine raw uint32 limb-dot accumulators into [0, p).
+
+    hh/mid/ll are the hi*hi / cross / lo*lo contraction sums (uint32,
+    any value — callers enforce the no-wrap depth bounds).  Each is
+    Barrett-reduced before the 16-bit recombination constant is applied,
+    so every intermediate stays below p * 2**16 < 2**32.
+    """
+    f_hihi = (1 << 16) % p
+    f_mid = LIMB % p
+
+    def mulc(x, c):
+        if c == 0:
+            return jnp.zeros_like(x)
+        return barrett_reduce_u32(barrett_reduce_u32(x, p) * jnp.uint32(c), p)
+
+    out = mulc(hh, f_hihi) + mulc(mid, f_mid) + barrett_reduce_u32(ll, p)
+    return barrett_reduce_u32(out, p)  # sum of three residues < 3p
+
+
+@partial(jax.jit, static_argnames=("p",))
+def mod_matmul_int32(a: jnp.ndarray, b: jnp.ndarray, p: int = P_DEFAULT) -> jnp.ndarray:
+    """Exact GF(p) matmul on the native-integer tier (uint32 + Barrett).
+
+    Same operand contract as :func:`mod_matmul_f32` (batched / one-sided
+    2D layouts, int32 in [0, p)).  The limb dots still run in f32 (on
+    CPU/TPU the f32 GEMM is the fast contraction engine), but everything
+    *between* chunks moves to uint32:
+
+    * the contraction is split into CHUNK_K-deep chunks batched into ONE
+      set of dots (the chunk axis rides ``vmap`` as a batch dimension —
+      no ``scan``, no per-chunk reduction),
+    * the raw per-chunk partial sums accumulate across chunks in uint32,
+      where the headroom is 2**32 instead of f32's 2**24,
+    * a single Barrett recombination at the end replaces the per-chunk
+      ``%`` of the f32limb path.
+
+    Deep contractions therefore pay O(1) reductions instead of O(K/256),
+    which is where this path overtakes ``mod_matmul_f32`` (see
+    ``BENCH_protocol.json`` / ``docs/kernel_design.md``).  The no-wrap
+    bound is loud, not silent: padded depth beyond ``INT32_ACC_K``
+    (= 33024) raises instead of wrapping the accumulator.
+    """
+    _check_limb_prime(p)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim < 2 or b.ndim < 2:
+        raise ValueError(f"operands must be at least 2D, got {a.shape} {b.shape}")
+    if a.ndim > 2 and b.ndim > 2:
+        batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+        a = jnp.broadcast_to(a, batch + a.shape[-2:])
+        b = jnp.broadcast_to(b, batch + b.shape[-2:])
+        n_batch = len(batch)
+    else:
+        n_batch = 0
+    contract, batch_dims, ka, kb, move_m = _contract_dnums(a.ndim, b.ndim, n_batch)
+    dnums = (contract, batch_dims)
+
+    def dot(x, y):
+        return jax.lax.dot_general(x, y, dnums, preferred_element_type=jnp.float32)
+
+    def finish(out_u32):
+        out = out_u32.astype(jnp.int32)
+        return jnp.moveaxis(out, 0, -2) if move_m else out
+
+    k = a.shape[ka]
+    kpad = -(-k // CHUNK_K) * CHUNK_K
+    if kpad > INT32_ACC_K:
+        raise ValueError(
+            f"int32 backend: padded contraction depth {kpad} exceeds the "
+            f"uint32 accumulator bound INT32_ACC_K={INT32_ACC_K} "
+            f"({INT32_ACC_CHUNKS} raw chunks; deeper sums would wrap "
+            f"silently) — split the contraction or use the f32limb backend"
+        )
+    if k <= CHUNK_K:
+        a_hi, a_lo = _limb_split(a.astype(jnp.float32))
+        b_hi, b_lo = _limb_split(b.astype(jnp.float32))
+        hh = dot(a_hi, b_hi).astype(jnp.uint32)
+        mid = dot(a_hi, b_lo).astype(jnp.uint32) + dot(a_lo, b_hi).astype(jnp.uint32)
+        ll = dot(a_lo, b_lo).astype(jnp.uint32)
+        return finish(_barrett_recombine(hh, mid, ll, p))
+
+    pad = kpad - k
+    if pad:
+        wa = [(0, 0)] * a.ndim
+        wa[ka] = (0, pad)
+        wb = [(0, 0)] * b.ndim
+        wb[kb] = (0, pad)
+        a = jnp.pad(a, wa)
+        b = jnp.pad(b, wb)
+    nchunk = kpad // CHUNK_K
+
+    a_hi, a_lo = _limb_split(a.astype(jnp.float32))
+    b_hi, b_lo = _limb_split(b.astype(jnp.float32))
+
+    def chunked(x, axis):
+        # Split the contraction axis into (nchunk, CHUNK_K) with the
+        # chunk count leading — the vmapped dot below turns it into one
+        # extra *batch* dimension of a single dot_general (the original
+        # dnums still apply to each CHUNK_K slice).
+        x = x.reshape(x.shape[:axis] + (nchunk, CHUNK_K) + x.shape[axis + 1 :])
+        return jnp.moveaxis(x, axis, 0)
+
+    dot_chunks = jax.vmap(dot)
+    hh = jnp.sum(dot_chunks(chunked(a_hi, ka), chunked(b_hi, kb)).astype(jnp.uint32), axis=0)
+    mid = jnp.sum(
+        dot_chunks(chunked(a_hi, ka), chunked(b_lo, kb)).astype(jnp.uint32)
+        + dot_chunks(chunked(a_lo, ka), chunked(b_hi, kb)).astype(jnp.uint32),
+        axis=0,
+    )
+    ll = jnp.sum(dot_chunks(chunked(a_lo, ka), chunked(b_lo, kb)).astype(jnp.uint32), axis=0)
+    return finish(_barrett_recombine(hh, mid, ll, p))
+
+
+# ----------------------------------------------------------------------
+# counter-based PRNG: threefry2x32 usable inside Pallas kernel bodies
+# ----------------------------------------------------------------------
+_THREEFRY_ROT = (13, 15, 26, 6, 17, 29, 16, 24)
+_THREEFRY_PARITY = 0x1BD11BDA
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, c0: jnp.ndarray, c1: jnp.ndarray):
+    """Threefry-2x32, 20 rounds (the Random123 / JAX PRNG block cipher).
+
+    Implemented from the spec in plain uint32 shifts/adds/xors so the
+    SAME function body runs at the jnp level *and* inside Pallas kernel
+    tiles — which is what makes fused in-kernel mask generation
+    bit-identical to the materialized :func:`field_mask` path.  The
+    5 x 4 round structure injects the extended key (k0, k1,
+    k0^k1^parity) after every group of four rounds, per the Skein key
+    schedule.  Returns the two output words.
+    """
+    k0 = jnp.uint32(k0)
+    k1 = jnp.uint32(k1)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_THREEFRY_PARITY))
+    x0 = c0.astype(jnp.uint32) + ks[0]
+    x1 = c1.astype(jnp.uint32) + ks[1]
+    for g in range(1, 6):
+        rots = _THREEFRY_ROT[:4] if g % 2 else _THREEFRY_ROT[4:]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r) ^ x0
+        x0 = x0 + ks[g % 3]
+        x1 = x1 + ks[(g + 1) % 3] + jnp.uint32(g)
+    return x0, x1
+
+
+@partial(jax.jit, static_argnames=("shape", "p"))
+def field_mask(key: jnp.ndarray, shape: tuple, p: int = P_DEFAULT) -> jnp.ndarray:
+    """Counter-based uniform GF(p) mask: the materialized reference of
+    the fused in-kernel blinding stream.
+
+    Element at row-major flat index i is
+    ``threefry2x32(key, (i, 0))[0] mod p`` — a pure function of (key,
+    position), so a Pallas tile can generate exactly its own slice from
+    program ids without the array ever existing in memory, and this
+    helper materializes the identical values for the portable backends
+    and the bit-identity tests.  ``key`` is a (2,) uint32 word pair (a
+    classic ``jax.random.PRNGKey`` works as-is).  The modulo-p bias
+    (~p / 2**32) matches the repo-standard ``jax.random.randint`` draw.
+    """
+    _check_limb_prime(p)
+    total = 1
+    for d in shape:
+        total *= int(d)
+    if total >= 1 << 32:
+        raise ValueError(
+            f"field_mask counter space exhausted: prod{tuple(shape)} = "
+            f"{total} >= 2**32 — counters would wrap and reuse mask values"
+        )
+    if total == 0:
+        return jnp.zeros(shape, jnp.int32)
+    key = jnp.asarray(key, jnp.uint32).reshape(-1)
+    ctr = jax.lax.iota(jnp.uint32, total)
+    x0, _ = threefry2x32(key[0], key[1], ctr, jnp.zeros_like(ctr))
+    return barrett_reduce_u32(x0, p).astype(jnp.int32).reshape(shape)
+
+
+def crt_combine(residues, primes) -> np.ndarray:
+    """Chinese-Remainder combination of per-prime residue arrays.
+
+    Garner's algorithm on the host: int64-exact for
+    ``prod(primes) < 2**62`` (checked loudly).  Returns int64 in
+    [0, prod(primes)).
+    """
+    primes = [int(q) for q in primes]
+    if len(residues) != len(primes):
+        raise ValueError("one residue array per prime required")
+    prod = 1
+    for q in primes:
+        prod *= q
+    if prod >= 1 << 62:
+        raise ValueError(
+            f"prod(primes) = {prod} >= 2**62: CRT combination would "
+            f"overflow int64 — use fewer/smaller primes"
+        )
+    x = np.asarray(residues[0], np.int64) % primes[0]
+    m = primes[0]
+    for r, q in zip(residues[1:], primes[1:]):
+        inv = pow(m % q, -1, q)  # raises if the moduli are not coprime
+        diff = (np.asarray(r, np.int64) - x) % q
+        x = x + (diff * inv % q) * m
+        m *= q
+    return x
 
 
 @partial(jax.jit, static_argnames=("p",))

@@ -25,7 +25,7 @@ import numpy as np
 
 from .constructions import Scheme, build_scheme
 from .gf import Field
-from .planner import BlockShapes, CMPCPlan, get_plan, make_plan
+from .planner import BlockShapes, CMPCPlan, get_plan
 from . import protocol
 
 
@@ -317,16 +317,34 @@ def secure_matmul_crt(
     primes: tuple = (65521, 65519),
     scale: Optional[int] = None,
     seed: int = 0,
+    n_spare: int = 0,
+    backend: str = "auto",
+    fused_masks: bool = False,
 ) -> SecureMatmulResult:
-    """CRT dual-prime CMPC (beyond-paper): run the protocol once per
+    """CRT multi-prime CMPC (beyond-paper): run the protocol once per
     16-bit prime and combine residues with the Chinese Remainder
-    Theorem.  The effective modulus P = p1*p2 ~ 2**32 gives fixed-point
-    headroom the single 16-bit field cannot, at exactly 2x the worker
-    compute (both instances still use the f32-limb TPU kernel).
+    Theorem.  The effective modulus P = prod(primes) ~ 2**32 for the
+    default pair gives fixed-point headroom a single 16-bit field
+    cannot, at one extra protocol pass per extra prime.
+
+    Routed through ``protocol.run_batched_crt``, so every residue pass
+    is the batched device-resident pipeline: ``a``/``b`` may be 2D
+    ([k, ma]/[k, mb], promoted to batch 1, returning a 2D ``y``) or
+    batched 3D, ``backend`` selects the kernel tier per residue, and
+    ``fused_masks`` generates secrets/blinding in-kernel.  Residue plans
+    come from the process-wide plan cache (one per prime field).
     """
-    k, ma = a.shape
-    _, mb = b.shape
-    pbig = int(np.prod([int(p) for p in primes]))
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    batched = a.ndim == 3
+    if not batched:
+        a = a[None]
+        b = b[None]
+    _, k, ma = a.shape
+    mb = b.shape[-1]
+    pbig = 1
+    for p in primes:
+        pbig *= int(p)
     if scale is None:
         half = (pbig - 1) // 2
         a_max = float(np.abs(a).max() + 1e-9)
@@ -336,26 +354,26 @@ def secure_matmul_crt(
             scale *= 2
     scheme = build_scheme(method, s, t, z)
     shapes = BlockShapes(k=k, ma=ma, mb=mb, s=s, t=t)
+    plans = [
+        get_plan(
+            scheme, shapes, field=Field(int(p)), n_spare=n_spare,
+            seed=seed + 17 * i,
+        )
+        for i, p in enumerate(primes)
+    ]
 
-    aq_signed = np.rint(np.asarray(a, np.float64) * scale).astype(np.int64)
-    bq_signed = np.rint(np.asarray(b, np.float64) * scale).astype(np.int64)
-    residues = []
-    plans = []
-    trace = None
-    for i, p in enumerate(primes):
-        field = Field(int(p))
-        plan = make_plan(scheme, shapes, field=field, seed=seed + 17 * i)
-        yq, trace = protocol.run(plan, aq_signed % p, bq_signed % p, seed=seed + 31 * i)
-        residues.append(np.asarray(yq, np.int64))
-        plans.append(plan)
-    # CRT combine (python ints to avoid overflow), then centered lift.
-    p1, p2 = (int(p) for p in primes)
-    inv_p1_mod_p2 = pow(p1, -1, p2)
-    r1, r2 = residues
-    combined = (r1 + ((r2 - r1) * inv_p1_mod_p2 % p2) * p1) % pbig
+    aq_signed = np.rint(a * scale).astype(np.int64)
+    bq_signed = np.rint(b * scale).astype(np.int64)
+    combined, trace = protocol.run_batched_crt(
+        plans, aq_signed, bq_signed, seed=seed + 31,
+        backend=backend, fused_masks=fused_masks,
+    )
+    # centered lift from [0, P) to (-P/2, P/2], then undo the scaling
     half = pbig // 2
     signed = np.where(combined > half, combined - pbig, combined)
     y = signed.astype(np.float64) / (scale * scale)
+    if not batched:
+        y = y[0]
     return SecureMatmulResult(y=y, trace=trace, plan=plans[0])
 
 

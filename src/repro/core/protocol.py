@@ -49,9 +49,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.modmatmul.ops import mod_matmul, polyeval
+from ..kernels.modmatmul.ops import (
+    mod_matmul,
+    mod_matmul_masked,
+    polyeval,
+    polyeval_masked,
+)
 from ..obs.tracer import TRACER
-from .gf import Field, random_field_device
+from .gf import Field, crt_combine, random_field_device
 from .planner import BlockShapes, CMPCPlan
 
 
@@ -432,8 +437,18 @@ def device_plan(plan: CMPCPlan) -> DevicePlan:
     return dp
 
 
+def _key_words(key: jnp.ndarray) -> jnp.ndarray:
+    """A JAX PRNG key as the (2,) uint32 word pair the counter-based
+    mask stream (``gf.field_mask`` / the fused kernels) consumes.
+    Accepts classic raw ``uint32[2]`` keys and new-style typed keys."""
+    if hasattr(key, "dtype") and key.dtype == jnp.uint32:
+        return key.reshape(-1)
+    return jax.random.key_data(key).reshape(-1).astype(jnp.uint32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("p", "s", "t", "z", "na", "nb", "backend")
+    jax.jit,
+    static_argnames=("p", "s", "t", "z", "na", "nb", "backend", "fused_masks"),
 )
 def _share_batched_jit(
     a: jnp.ndarray,
@@ -453,12 +468,21 @@ def _share_batched_jit(
     na: int,
     nb: int,
     backend: str,
+    fused_masks: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Phase 1 for a batch of products, on device.
 
     a: [batch, k, ma], b: [batch, k, mb] int32 in [0, p).  Returns
     (F_A(alpha_n), F_B(alpha_n)) stacked [batch, n_total, ., .] — the
     index-based block scatter replaces _block_stack_a/_b.
+
+    ``fused_masks`` switches the z secret coefficients from materialized
+    PRNG draws scattered into the stack to the counter-based threefry
+    stream fused into the share-evaluation kernel (``polyeval_masked``):
+    the secret rows stay zero and the Vandermonde columns of the secret
+    powers multiply in-tile mask values instead.  Decode correctness is
+    draw-independent (secrets occupy non-important coefficients), so
+    both routes yield bit-identical Y.
     """
     batch, k, ma = a.shape
     mb = b.shape[-1]
@@ -474,7 +498,6 @@ def _share_batched_jit(
     )
     stack_a = jnp.zeros((batch, na, bra, bca), jnp.int32)
     stack_a = stack_a.at[:, a_pos].set(a_blocks)
-    stack_a = stack_a.at[:, sa_pos].set(random_field_device(k1, (batch, z, bra, bca), p))
     b_blocks = (
         b.reshape(batch, s, brb, t, bcb)
         .transpose(0, 1, 3, 2, 4)
@@ -482,6 +505,19 @@ def _share_batched_jit(
     )
     stack_b = jnp.zeros((batch, nb, brb, bcb), jnp.int32)
     stack_b = stack_b.at[:, b_pos].set(b_blocks)
+    if fused_masks:
+        # secret coefficients never materialize: V[:, secret] @ R(key)
+        # is generated inside the matmul tile on the pallas backends
+        fa = polyeval_masked(
+            va, stack_a, jnp.take(va, sa_pos, axis=1), _key_words(k1),
+            p=p, backend=backend,
+        )
+        fb = polyeval_masked(
+            vb, stack_b, jnp.take(vb, sb_pos, axis=1), _key_words(k2),
+            p=p, backend=backend,
+        )
+        return fa, fb
+    stack_a = stack_a.at[:, sa_pos].set(random_field_device(k1, (batch, z, bra, bca), p))
     stack_b = stack_b.at[:, sb_pos].set(random_field_device(k2, (batch, z, brb, bcb), p))
     fa = polyeval(va, stack_a, p=p, backend=backend)  # [batch, n_total, bra, bca]
     fb = polyeval(vb, stack_b, p=p, backend=backend)
@@ -489,13 +525,19 @@ def _share_batched_jit(
 
 
 def share_batched(
-    plan: CMPCPlan, a: jnp.ndarray, b: jnp.ndarray, key, backend: str = "auto"
+    plan: CMPCPlan,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    key,
+    backend: str = "auto",
+    fused_masks: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sources evaluate a whole batch of share pairs in one jitted call.
 
     a: [batch, k, ma], b: [batch, k, mb] int32 in [0, p); ``key`` is a
-    JAX PRNG key (secrets are drawn on device).  Entry point for the
-    sharded batched engine and the batched edge runtime.
+    JAX PRNG key (secrets are drawn on device — or generated inside the
+    share kernel when ``fused_masks``).  Entry point for the sharded
+    batched engine and the batched edge runtime.
     """
     dp = device_plan(plan)
     with TRACER.span(
@@ -510,6 +552,7 @@ def share_batched(
             na=len(plan.scheme.fa_powers),
             nb=len(plan.scheme.fb_powers),
             backend=backend,
+            fused_masks=fused_masks,
         )
 
 
@@ -538,7 +581,9 @@ def _decode_batched_jit(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("p", "s", "t", "z", "n_workers", "na", "nb", "backend"),
+    static_argnames=(
+        "p", "s", "t", "z", "n_workers", "na", "nb", "backend", "fused_masks",
+    ),
 )
 def _run_batched_jit(
     a: jnp.ndarray,
@@ -564,6 +609,7 @@ def _run_batched_jit(
     na: int,
     nb: int,
     backend: str,
+    fused_masks: bool = False,
 ) -> jnp.ndarray:
     """All three protocol phases for a batch of products, on device.
 
@@ -578,6 +624,7 @@ def _run_batched_jit(
     fa, fb = _share_batched_jit(
         a, b, kshare, va, vb, a_pos, sa_pos, b_pos, sb_pos,
         p=p, s=s, t=t, z=z, na=na, nb=nb, backend=backend,
+        fused_masks=fused_masks,
     )
 
     # Phase 2 — worker multiply + dense degree-reduction exchange.
@@ -585,17 +632,24 @@ def _run_batched_jit(
     bry, bcy = ma // t, mb // t
     blk_flat = bry * bcy
     h_flat = jnp.take(h, ids2, axis=1).reshape(batch, n_workers, blk_flat)
-    i_flat = mod_matmul(mix_t, h_flat, p=p, backend=backend)  # [batch, n_total, .]
     # Each Phase-2 worker contributes z blinding matrices R_w^{(n)}, but
     # only their sum over workers enters I(x) — and a sum of i.i.d.
     # uniforms mod p is itself uniform, so the dense single-host
     # simulation draws the summed term directly (n_workers x less PRNG
     # volume; the reference ``degree_reduce`` keeps per-worker draws).
-    r_sum = random_field_device(k3, (batch, z, blk_flat), p)
-    noise = mod_matmul(vnoise, r_sum, p=p, backend=backend)  # [batch, n_total, .]
-    i_evals = (
-        (i_flat.astype(jnp.uint32) + noise.astype(jnp.uint32)) % jnp.uint32(p)
-    ).astype(jnp.int32)
+    if fused_masks:
+        # summed blinding generated inside the mixing matmul's tiles:
+        # I = mix.T @ H + Vnoise @ R(k3), masks never materialized
+        i_evals = mod_matmul_masked(
+            mix_t, h_flat, vnoise, _key_words(k3), p=p, backend=backend
+        )
+    else:
+        i_flat = mod_matmul(mix_t, h_flat, p=p, backend=backend)  # [b, n_total, .]
+        r_sum = random_field_device(k3, (batch, z, blk_flat), p)
+        noise = mod_matmul(vnoise, r_sum, p=p, backend=backend)
+        i_evals = (
+            (i_flat.astype(jnp.uint32) + noise.astype(jnp.uint32)) % jnp.uint32(p)
+        ).astype(jnp.int32)
 
     # Phase 3 — shared with the sharded engine.
     return _decode_batched_jit(
@@ -681,6 +735,7 @@ def run_batched(
     phase2_ids: Optional[Sequence[int]] = None,
     phase3_ids: Optional[Sequence[int]] = None,
     backend: str = "auto",
+    fused_masks: bool = False,
 ) -> Tuple[np.ndarray, Trace]:
     """Batched protocol: Y[i] = A[i]^T B[i] mod p for a batch of products.
 
@@ -692,6 +747,12 @@ def run_batched(
     Per-example secret shares and blinding terms come from the JAX PRNG
     (folded from ``seed``), so results are reproducible per seed but the
     randomness differs from the numpy path of ``run``.
+
+    ``fused_masks`` generates the Phase-1 secret coefficients and the
+    Phase-2 summed blinding term inside the matmul kernels (counter-based
+    threefry streams) instead of materializing them; Y is unaffected —
+    decode exactness holds for any draw — so fused and unfused runs
+    agree bit-for-bit.
 
     Returns (y [batch, ma, mb] int64, Trace for the whole batch).
     """
@@ -734,8 +795,58 @@ def run_batched(
             na=len(plan.scheme.fa_powers),
             nb=len(plan.scheme.fb_powers),
             backend=backend,
+            fused_masks=fused_masks,
         )
     return np.asarray(y, np.int64), batch_trace(plan, int(a.shape[0]))
+
+
+def _sum_traces(traces: Sequence[Trace]) -> Trace:
+    """Aggregate per-residue traces whose wire widths may differ (CRT
+    primes of different byte widths): element counts sum, the combined
+    width is the widest residue's (an upper bound on the byte view)."""
+    out = Trace(elem_bytes=max(t.elem_bytes for t in traces))
+    for t in traces:
+        out.phase1_source_to_worker += t.phase1_source_to_worker
+        out.phase2_worker_to_worker += t.phase2_worker_to_worker
+        out.phase3_worker_to_master += t.phase3_worker_to_master
+    return out
+
+
+def run_batched_crt(
+    plans: Sequence[CMPCPlan],
+    a: np.ndarray,
+    b: np.ndarray,
+    seed: int = 0,
+    phase2_ids: Optional[Sequence[int]] = None,
+    phase3_ids: Optional[Sequence[int]] = None,
+    backend: str = "auto",
+    fused_masks: bool = False,
+) -> Tuple[np.ndarray, Trace]:
+    """CRT multi-prime batched protocol: Y mod prod(p_i) from one
+    ``run_batched`` per residue plan.
+
+    ``plans`` hold the same scheme/shapes over *distinct* prime fields
+    (one plan per CRT residue); operands are arbitrary int64 (reduced
+    per field inside ``run_batched``), and the residue outputs combine
+    on the host via Garner's algorithm into int64 in [0, prod(p_i)).
+    This widens dynamic range without deeper limb arithmetic: fixed-point
+    headroom scales with the prime product at one extra protocol pass
+    per extra prime.  The returned Trace sums all residue passes.
+    """
+    primes = [plan.field.p for plan in plans]
+    if len(set(primes)) != len(primes):
+        raise ValueError(f"CRT plans must use distinct primes, got {primes}")
+    residues, traces = [], []
+    with TRACER.span("protocol.run_batched_crt", primes=len(primes)):
+        for i, plan in enumerate(plans):
+            y, tr = run_batched(
+                plan, a, b, seed=seed + 31 * i,
+                phase2_ids=phase2_ids, phase3_ids=phase3_ids,
+                backend=backend, fused_masks=fused_masks,
+            )
+            residues.append(y)
+            traces.append(tr)
+    return crt_combine(residues, primes), _sum_traces(traces)
 
 
 def run_batched_sharded(

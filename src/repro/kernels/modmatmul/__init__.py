@@ -1,3 +1,16 @@
-from .kernel import modmatmul_pallas  # noqa: F401
-from .ops import mod_matmul, polyeval  # noqa: F401
+from .kernel import (  # noqa: F401
+    modmatmul_int32_pallas,
+    modmatmul_masked_pallas,
+    modmatmul_pallas,
+)
+from .ops import (  # noqa: F401
+    autotune_tiles,
+    mod_matmul,
+    mod_matmul_crt,
+    mod_matmul_masked,
+    pick_tiles,
+    polyeval,
+    polyeval_masked,
+    register_tile_chooser,
+)
 from .ref import modmatmul_jnp_ref, modmatmul_ref  # noqa: F401

@@ -1,12 +1,15 @@
 """Cross-backend equivalence for the GF(p) matmul layer.
 
-Three implementations must agree bit-exactly: the Pallas kernel
-(interpret mode on CPU), the portable f32limb path, and the host
-``Field.matmul`` oracle — swept over non-tile-multiple shapes,
-batched/broadcast operand layouts, and adversarial dense-high-limb
-inputs that sit on the lazy-reduction bounds.  Also pins the
-single-launch contract: batched ``mod_matmul`` lowers to ONE
-``pallas_call`` whose grid carries the batch axis.
+Five implementations must agree bit-exactly: both Pallas kernels
+(f32-limb and native-int32, interpret mode on CPU), the portable
+f32limb and int32 paths, and the host ``Field.matmul`` oracle — swept
+over non-tile-multiple shapes, batched/broadcast operand layouts, and
+adversarial dense-high-limb inputs that sit on the lazy-reduction
+bounds.  Also pins the single-launch contract: batched ``mod_matmul``
+lowers to ONE ``pallas_call`` whose grid carries the batch axis.
+
+(The randomized extension of this fixed grid — random shapes, primes,
+and distributions — lives in ``test_kernel_fuzz.py``.)
 """
 import numpy as np
 import pytest
@@ -34,10 +37,22 @@ def _oracle(a, b, p=P):
     return out.reshape(batch + out.shape[-2:])
 
 
-def _both_backends(a, b, **kw):
-    got_f = np.asarray(mod_matmul(a, b, backend="f32limb", **kw))
-    got_p = np.asarray(mod_matmul(a, b, backend="pallas", interpret=True, **kw))
-    return got_f, got_p
+BACKENDS = ("f32limb", "int32", "pallas", "pallas_int32")
+
+
+def _all_backends(a, b, **kw):
+    """{backend: result} over every backend (Pallas in interpret mode)."""
+    out = {}
+    for backend in BACKENDS:
+        if backend.startswith("pallas"):
+            kw.setdefault("interpret", True)
+        out[backend] = np.asarray(mod_matmul(a, b, backend=backend, **kw))
+    return out
+
+
+def _assert_all_equal(want, got_by_backend, ctx=None):
+    for backend, got in got_by_backend.items():
+        assert np.array_equal(want, got), (backend, ctx)
 
 
 # non-tile-multiple shapes: every dim off the 8/128/256 alignment grid
@@ -50,9 +65,7 @@ def test_2d_all_backends(m, k, n):
     a = rng.integers(0, P, (m, k)).astype(np.int32)
     b = rng.integers(0, P, (k, n)).astype(np.int32)
     want = modmatmul_ref(a, b, P)
-    got_f, got_p = _both_backends(a, b, p=P)
-    assert np.array_equal(want, got_f)
-    assert np.array_equal(want, got_p)
+    _assert_all_equal(want, _all_backends(a, b, p=P), (m, k, n))
 
 
 BATCH_CASES = [
@@ -72,9 +85,7 @@ def test_batched_layouts_all_backends(sa, sb):
     a = rng.integers(0, P, sa).astype(np.int32)
     b = rng.integers(0, P, sb).astype(np.int32)
     want = _oracle(a, b)
-    got_f, got_p = _both_backends(a, b, p=P)
-    assert np.array_equal(want, got_f), (sa, sb)
-    assert np.array_equal(want, got_p), (sa, sb)
+    _assert_all_equal(want, _all_backends(a, b, p=P), (sa, sb))
 
 
 @pytest.mark.parametrize("p", [251, 4093, 40961, 65519, 65521])
@@ -83,9 +94,7 @@ def test_batched_primes(p):
     a = rng.integers(0, p, (3, 12, 37)).astype(np.int32)
     b = rng.integers(0, p, (3, 37, 9)).astype(np.int32)
     want = _oracle(a, b, p)
-    got_f, got_p = _both_backends(a, b, p=p)
-    assert np.array_equal(want, got_f)
-    assert np.array_equal(want, got_p)
+    _assert_all_equal(want, _all_backends(a, b, p=p), p)
 
 
 # ----------------------------------------------------------------------
@@ -105,9 +114,7 @@ def test_dense_high_limb_bounds(k):
     a = rng.integers(P - 241, P, (2, 8, k)).astype(np.int32)
     b = rng.integers(P - 241, P, (2, k, 8)).astype(np.int32)
     want = _oracle(a, b)
-    got_f, got_p = _both_backends(a, b, p=P)
-    assert np.array_equal(want, got_f), k
-    assert np.array_equal(want, got_p), k
+    _assert_all_equal(want, _all_backends(a, b, p=P), k)
 
 
 def test_all_maximal_elements():
@@ -116,9 +123,7 @@ def test_all_maximal_elements():
         a = np.full((2, 4, k), P - 1, np.int32)
         b = np.full((2, k, 4), P - 1, np.int32)
         want = _oracle(a, b)
-        got_f, got_p = _both_backends(a, b, p=P)
-        assert np.array_equal(want, got_f), k
-        assert np.array_equal(want, got_p), k
+        _assert_all_equal(want, _all_backends(a, b, p=P), k)
 
 
 # ----------------------------------------------------------------------

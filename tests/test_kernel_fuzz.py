@@ -1,0 +1,269 @@
+"""Differential fuzz + property tests for the native-integer kernel tier.
+
+Three layers of assurance on top of the fixed-shape grid of
+``test_backend_equiv.py``:
+
+* **differential fuzz** — random (B, M, K, N) shapes, primes, and
+  adversarial operand distributions (dense-high-limb, near-p, maximal,
+  sparse) through every backend — portable f32limb/int32, both Pallas
+  kernels in interpret mode, and the dual-prime CRT route — each
+  checked bit-for-bit against an arbitrary-precision host matmul
+  (``repro.kernels.modmatmul.fuzz``),
+* **reduction-bound properties** — the int32 paths must raise loudly,
+  never wrap silently, when a contraction exceeds the uint32/int32
+  accumulator budgets (mirroring the ``npad * p < 2**31`` regression
+  style of test_kernels.py), and stay exact AT the bound,
+* **PRNG stream identity** — the threefry2x32 implementation matches
+  the Random123 known-answer vectors (and JAX's own implementation when
+  importable), and the fused in-kernel mask stream is bit-identical to
+  the materialized ``field_mask`` reference under a fixed key.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: deterministic example grid
+    from _hypothesis_compat import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.gf import (
+    CHUNK_K,
+    INT32_ACC_K,
+    P_DEFAULT,
+    crt_combine,
+    field_mask,
+    mod_matmul_int32,
+    threefry2x32,
+)
+from repro.kernels.modmatmul import fuzz as kfuzz
+from repro.kernels.modmatmul.kernel import (
+    INT32_KERNEL_MAX_BK,
+    modmatmul_masked_pallas,
+    modmatmul_pallas,
+)
+from repro.kernels.modmatmul.ops import (
+    _resolve_auto,
+    mod_matmul,
+    mod_matmul_masked,
+)
+
+
+# ----------------------------------------------------------------------
+# differential fuzz across all backends
+# ----------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fuzz_all_backends_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    case = kfuzz.sample_case(rng)
+    mismatches = kfuzz.check_case(case)
+    assert not mismatches, "\n".join(m.describe() for m in mismatches)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fuzz_deep_k_int32_tier(seed):
+    """Deep-K cases (K > 256) exercise the int32 tier's chunked uint32
+    accumulator and the deep-bk Pallas int32 kernel."""
+    rng = np.random.default_rng(seed)
+    case = kfuzz.sample_case(rng, deep_k=True)
+    assert case.k > CHUNK_K
+    mismatches = kfuzz.check_case(case)
+    assert not mismatches, "\n".join(m.describe() for m in mismatches)
+
+
+def test_run_fuzz_entry_point_clean():
+    """The CLI/CI entry point itself: a short fixed-seed run is clean."""
+    assert kfuzz.run_fuzz(examples=4, seed=123) == []
+
+
+def test_fuzz_harness_detects_a_planted_bug():
+    """The harness must actually be able to fail: a corrupted engine is
+    reported as a mismatch (guards against a vacuous oracle)."""
+    case = kfuzz.Case(
+        batch=1, m=3, k=5, n=2, p=251, mode="uniform", layout="2d", seed=7
+    )
+    broken = dict(kfuzz.ENGINES)
+    broken["evil"] = lambda a, b, p: kfuzz.ENGINES["f32limb"](a, b, p) + 1
+    orig = kfuzz.ENGINES
+    kfuzz.ENGINES = broken
+    try:
+        bad = kfuzz.check_case(case, engines=["evil"])
+    finally:
+        kfuzz.ENGINES = orig
+    assert len(bad) == 1 and bad[0].engine == "evil"
+
+
+# ----------------------------------------------------------------------
+# reduction-bound properties: loud failure, never silent wrap
+# ----------------------------------------------------------------------
+def test_int32_portable_overflow_raises_loudly():
+    a = jnp.zeros((2, INT32_ACC_K + 1), jnp.int32)
+    b = jnp.zeros((INT32_ACC_K + 1, 2), jnp.int32)
+    with pytest.raises(ValueError, match="wrap silently"):
+        mod_matmul_int32(a, b, P_DEFAULT)
+
+
+def test_int32_portable_exact_at_the_bound():
+    """Maximal operands at the exact accumulator limit: the summed
+    cross-limb dot reaches its uint32 ceiling and must not wrap."""
+    p = P_DEFAULT
+    a = jnp.full((1, INT32_ACC_K), p - 1, jnp.int32)
+    b = jnp.full((INT32_ACC_K, 1), p - 1, jnp.int32)
+    got = int(np.asarray(mod_matmul_int32(a, b, p))[0, 0])
+    assert got == (INT32_ACC_K * (p - 1) * (p - 1)) % p
+
+
+def test_int32_kernel_bk_bound_raises_loudly():
+    k = INT32_KERNEL_MAX_BK + 127  # next 128-multiple past the bound
+    k -= k % 128
+    a = jnp.zeros((8, k), jnp.int32)
+    b = jnp.zeros((k, 128), jnp.int32)
+    with pytest.raises(ValueError, match="wrap silently"):
+        modmatmul_pallas(
+            a, b, p=P_DEFAULT, bm=8, bn=128, bk=k, interpret=True,
+            variant="int32",
+        )
+
+
+def test_big_prime_rejected_everywhere():
+    a = jnp.zeros((8, 128), jnp.int32)
+    b = jnp.zeros((128, 128), jnp.int32)
+    with pytest.raises(ValueError):
+        modmatmul_pallas(a, b, p=65537, bm=8, bn=128, bk=128, interpret=True)
+    with pytest.raises(ValueError):
+        mod_matmul_int32(a, b, 65537)
+
+
+def test_auto_dispatch_respects_the_accumulator_bound():
+    """``auto`` on CPU: f32limb for shallow K, int32 once deeper than a
+    single 256 chunk, and back to f32limb past the uint32 budget —
+    never a silently-wrapping int32 pick."""
+    assert _resolve_auto(CHUNK_K) == "f32limb"
+    assert _resolve_auto(CHUNK_K + 1) == "int32"
+    assert _resolve_auto(INT32_ACC_K) == "int32"
+    assert _resolve_auto(INT32_ACC_K + 1) == "f32limb"
+
+
+def test_mask_counter_space_exhaustion_raises():
+    with pytest.raises(ValueError, match="counter space"):
+        field_mask(jnp.zeros(2, jnp.uint32), (1 << 16, 1 << 16), P_DEFAULT)
+    with pytest.raises(ValueError, match="counter space"):
+        modmatmul_masked_pallas(
+            jnp.zeros((8, 128), jnp.int32),
+            jnp.zeros((128, 128), jnp.int32),
+            jnp.zeros((8, 2), jnp.int32),
+            jnp.zeros(2, jnp.uint32),
+            p=P_DEFAULT, ncols=1 << 31, bm=8, bn=128, bk=128, interpret=True,
+        )
+
+
+def test_crt_combine_guards():
+    with pytest.raises(ValueError, match="2\\*\\*62"):
+        crt_combine(
+            [np.zeros(1, np.int64)] * 4, [65521, 65519, 65497, 65479]
+        )
+    with pytest.raises(ValueError):  # non-coprime moduli
+        crt_combine([np.zeros(1, np.int64)] * 2, [12, 8])
+
+
+# ----------------------------------------------------------------------
+# PRNG stream identity
+# ----------------------------------------------------------------------
+def test_threefry_known_answer_vectors():
+    """Random123 KATs for threefry2x32 (20 rounds)."""
+    kats = [
+        ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+        (
+            (0xFFFFFFFF, 0xFFFFFFFF),
+            (0xFFFFFFFF, 0xFFFFFFFF),
+            (0x1CB996FC, 0xBB002BE7),
+        ),
+        (
+            (0x13198A2E, 0x03707344),
+            (0x243F6A88, 0x85A308D3),
+            (0xC4923A9C, 0x483DF7A0),
+        ),
+    ]
+    for (k0, k1), (c0, c1), (e0, e1) in kats:
+        x0, x1 = threefry2x32(
+            jnp.uint32(k0), jnp.uint32(k1),
+            jnp.uint32(c0)[None], jnp.uint32(c1)[None],
+        )
+        assert (int(x0[0]), int(x1[0])) == (e0, e1)
+
+
+def test_threefry_matches_jax_internal():
+    jax_prng = pytest.importorskip("jax._src.prng")
+    key = jnp.asarray([12345, 67890], jnp.uint32)
+    ctr = jnp.arange(64, dtype=jnp.uint32)
+    ours = threefry2x32(key[0], key[1], ctr, jnp.zeros_like(ctr))
+    theirs = jax_prng.threefry_2x32(key, jnp.stack([ctr, jnp.zeros_like(ctr)]))
+    np.testing.assert_array_equal(np.asarray(ours[0]), np.asarray(theirs[0]))
+    np.testing.assert_array_equal(np.asarray(ours[1]), np.asarray(theirs[1]))
+
+
+def test_field_mask_deterministic_and_roughly_uniform():
+    key = jnp.asarray([5, 6], jnp.uint32)
+    m1 = np.asarray(field_mask(key, (64, 64), P_DEFAULT))
+    m2 = np.asarray(field_mask(key, (64, 64), P_DEFAULT))
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.min() >= 0 and m1.max() < P_DEFAULT
+    # a different key gives a different stream
+    m3 = np.asarray(field_mask(jnp.asarray([5, 7], jnp.uint32), (64, 64), P_DEFAULT))
+    assert (m1 != m3).mean() > 0.99
+    # coarse uniformity: each quartile of [0, p) gets ~25% of draws
+    hist, _ = np.histogram(m1, bins=4, range=(0, P_DEFAULT))
+    assert np.abs(hist / m1.size - 0.25).max() < 0.05
+    # prefix consistency: a smaller shape is a prefix of the same stream
+    m4 = np.asarray(field_mask(key, (16,), P_DEFAULT))
+    np.testing.assert_array_equal(m4, m1.reshape(-1)[:16])
+
+
+# ----------------------------------------------------------------------
+# fused in-kernel masks == materialized masks, bit for bit
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("variant", ["f32", "int32"])
+@pytest.mark.parametrize("batched", [False, True])
+def test_fused_mask_bit_identical_to_materialized(variant, batched):
+    rng = np.random.default_rng(11)
+    p = P_DEFAULT
+    z, ncols = 3, 100
+    sa = (2, 16, 256) if batched else (16, 256)
+    sb = (2, 256, 128) if batched else (256, 128)
+    a = jnp.asarray(rng.integers(0, p, sa), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, sb), jnp.int32)
+    v = jnp.asarray(rng.integers(0, p, (16, z)), jnp.int32)
+    key = jnp.asarray([99, 100], jnp.uint32)
+    fused = modmatmul_masked_pallas(
+        a, b, v, key, p=p, ncols=ncols, bm=8, bn=128, bk=128,
+        interpret=True, variant=variant,
+    )
+    batch = (2,) if batched else ()
+    mask = field_mask(key, batch + (z, ncols), p)
+    want = (
+        np.asarray(mod_matmul(a, b, p=p, backend="f32limb"), np.int64)[..., :ncols]
+        + np.asarray(mod_matmul(v, mask, p=p, backend="f32limb"), np.int64)
+    ) % p
+    np.testing.assert_array_equal(np.asarray(fused, np.int64)[..., :ncols], want)
+
+
+@pytest.mark.parametrize("backend", ["f32limb", "int32", "pallas", "pallas_int32"])
+def test_mod_matmul_masked_backends_bit_identical(backend):
+    """The ops-level fused entry point: every backend produces the same
+    bits for the same key (unaligned logical shapes, padding sliced)."""
+    rng = np.random.default_rng(12)
+    p = P_DEFAULT
+    a = jnp.asarray(rng.integers(0, p, (3, 9, 300)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (3, 300, 40)), jnp.int32)
+    v = jnp.asarray(rng.integers(0, p, (9, 2)), jnp.int32)
+    key = jnp.asarray([4, 8], jnp.uint32)
+    got = np.asarray(mod_matmul_masked(a, b, v, key, p=p, backend=backend), np.int64)
+    mask = field_mask(key, (3, 2, 40), p)
+    want = (
+        np.asarray(mod_matmul(a, b, p=p, backend="f32limb"), np.int64)
+        + np.asarray(mod_matmul(v, mask, p=p, backend="f32limb"), np.int64)
+    ) % p
+    np.testing.assert_array_equal(got, want)

@@ -38,7 +38,7 @@ DEFAULT_FILES = ("BENCH_protocol.json", "BENCH_edge.json", "BENCH_serve.json")
 KNOWN_SCHEMA = {
     "BENCH_protocol.json": (
         "bench", "config", "batches", "phases_us", "padding_waste",
-        "sharded_batched",
+        "sharded_batched", "int_backends",
     ),
     "BENCH_edge.json": (
         "bench", "config", "scenarios", "per_link", "pipelined",
